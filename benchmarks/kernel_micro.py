@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks + field-throughput calibration.
+
+Measures the pure-jnp limb field matmul (the TPU algorithm executed by XLA
+CPU) and the paper's own numpy-uint64 arithmetic; the measured MAC/s feeds
+cost_model.WanParams.field_macs_per_s so the Fig-3 reproduction is priced
+with a real number from THIS host.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field as F
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / reps
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 1024, 256
+    a = jnp.asarray(rng.integers(0, F.P, size=(m, k)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, F.P, size=(k, n)).astype(np.int32))
+
+    jitted = jax.jit(F.matmul)
+    dt = _time(jitted, a, b)
+    macs = m * k * n
+    report("kernel_micro/field_matmul_jnp", dt * 1e6,
+           f"{macs / dt / 1e6:.1f}_Mmac_s")
+
+    an, bn = np.asarray(a), np.asarray(b)
+    dt = _time(lambda x, y: F.np_matmul(x, y), an, bn)
+    report("kernel_micro/field_matmul_uint64", dt * 1e6,
+           f"{macs / dt / 1e6:.1f}_Mmac_s")
+
+    x = jnp.asarray(rng.integers(0, F.P, size=(512, 512)).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, F.P, size=(512,)).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    dt_fused = _time(lambda: ops.coded_gradient(x, w, c, force_pallas=True))
+    dt_ref = _time(lambda: jax.jit(ref.coded_gradient)(x, w, c))
+    report("kernel_micro/coded_gradient_pallas_interp", dt_fused * 1e6,
+           f"ref_{dt_ref * 1e6:.0f}us")
+
+    z = jnp.asarray(rng.integers(0, F.P, size=(1 << 16,)).astype(np.int32))
+    dt = _time(lambda: ops.poly_eval(z, c, force_pallas=True))
+    report("kernel_micro/poly_eval_pallas_interp", dt * 1e6,
+           f"{z.size / dt / 1e6:.1f}_Melem_s")
+
+    return macs / _time(jitted, a, b)      # field MAC/s for the cost model

@@ -1,0 +1,60 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLUMNS = ("arch", "shape", "mesh", "dominant")
+
+
+def load(results_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs, mesh: str = "pod") -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh
+            and r.get("status") == "ok"]
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " MODEL_FLOPS/HLO | roofline_frac | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        peak = r.get("bytes_per_device", {}).get("peak", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | {peak:.2f} |")
+    skipped = [r for r in recs if r.get("mesh") == mesh
+               and "skipped" in r.get("status", "")]
+    for r in skipped:
+        lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                     f"SKIP | - | - | - |")
+    return "\n".join(lines)
+
+
+def run(report, results_dir: str = "results/dryrun"):
+    recs = load(results_dir)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        report("roofline/cells", 0.0, "no_dryrun_results_yet")
+        return
+    for r in ok:
+        report(f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+               r.get("bound_s", max(r["compute_s"], r["memory_s"],
+                                    r["collective_s"])) * 1e6,
+               f"{r['dominant']}_frac{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    recs = load()
+    for mesh in ("pod", "multipod"):
+        print(f"\n### {mesh}\n")
+        print(markdown_table(recs, mesh))

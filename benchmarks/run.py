@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: kernel,fig3,fig4,"
+                         "table1,table2,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+
+    def report(name: str, us_per_call: float, derived: str = ""):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        rows.append(row)
+        print(row, flush=True)
+
+    print("name,us_per_call,derived")
+    failures = []
+
+    def stage(key, fn):
+        if only and key not in only:
+            return None
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((key, e))
+            traceback.print_exc()
+            return None
+
+    from . import (fig3_speedup, fig4_accuracy, kernel_micro,
+                   roofline_report, table1_breakdown, table2_complexity)
+
+    macs = stage("kernel", lambda: kernel_micro.run(report))
+    stage("fig4", lambda: fig4_accuracy.run(report))
+    stage("fig3", lambda: fig3_speedup.run(report, macs))
+    stage("table1", lambda: table1_breakdown.run(report, macs))
+    stage("table2", lambda: table2_complexity.run(report))
+    stage("roofline", lambda: roofline_report.run(report))
+
+    if failures:
+        print(f"{len(failures)} benchmark stages failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table I reproduction: breakdown of running time at N=50 (CIFAR-10 scale).
+
+Comp / Comm / Enc-Dec columns for [BGW88], [BH08], COPML Case 1 & Case 2,
+priced by the Table-II cost model with the paper's WAN parameters and this
+host's measured field throughput.  Paper reference totals: 22384 / 7915 /
+440 / 916 seconds.
+"""
+
+from __future__ import annotations
+
+from repro.core.cost_model import WanParams, Workload, copml_costs, \
+    mpc_baseline_costs
+from repro.core.protocol import case1_params, case2_params
+
+PAPER = {"bgw": (918, 21142, 324, 22384), "bh08": (914, 6812, 189, 7915),
+         "copml_case1": (141, 284, 15, 440), "copml_case2": (240, 654, 22, 916)}
+
+
+def run(report, field_macs_per_s: float | None = None):
+    hw = WanParams() if field_macs_per_s is None else \
+        WanParams(field_macs_per_s=field_macs_per_s)
+    n, m, d, j = 50, 9019, 3073, 50
+    k1, _ = case1_params(n)
+    k2, t2 = case2_params(n)
+
+    rows = {
+        "bgw": mpc_baseline_costs(
+            Workload(m, d, n, k2, t2, j), hw, scheme="bgw"),
+        "bh08": mpc_baseline_costs(
+            Workload(m, d, n, k2, t2, j), hw, scheme="bh08"),
+        "copml_case1": copml_costs(Workload(m, d, n, k1, 1, j), hw),
+        "copml_case2": copml_costs(Workload(m, d, n, k2, t2, j), hw),
+    }
+    for name, c in rows.items():
+        p = PAPER[name]
+        report(f"table1/{name}_comp_s", c["comp_s"] * 1e6,
+               f"paper_{p[0]}s")
+        report(f"table1/{name}_comm_s", c["comm_s"] * 1e6,
+               f"paper_{p[1]}s")
+        report(f"table1/{name}_encdec_s", c["enc_s"] * 1e6,
+               f"paper_{p[2]}s")
+        report(f"table1/{name}_total_s", c["total_s"] * 1e6,
+               f"paper_{p[3]}s")

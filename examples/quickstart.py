@@ -1,0 +1,52 @@
+"""Quickstart: privacy-preserving collaborative logistic regression (COPML).
+
+13 virtual clients jointly train a logistic regression model without any of
+them ever seeing another client's data, the intermediate models, or the
+gradients -- only the final model is revealed (paper Algorithm 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.baselines import float_logreg, sigmoid
+from repro.core.protocol import Copml, CopmlConfig, case1_params
+from repro.data import pipeline
+
+
+def main():
+    m, d, n_clients, iters = 260, 16, 13, 30
+    x, y = pipeline.classification_dataset(m=m, d=d, seed=0, margin=2.0)
+
+    k, t = case1_params(n_clients)           # paper Case 1: max parallelism
+    cfg = CopmlConfig(n_clients=n_clients, k=k, t=t, eta=1.0)
+    print(f"COPML: N={n_clients} clients, K={k} (parallelization), "
+          f"T={t} (privacy), recovery threshold R={cfg.recovery_threshold}")
+    print(f"  -> tolerates {n_clients - cfg.recovery_threshold} stragglers "
+          f"per iteration, privacy against any {t} colluding clients")
+
+    proto = Copml(cfg, m, d)
+    client_x, client_y = pipeline.split_clients(x, y, n_clients)
+
+    def report(t_, w):
+        if t_ % 10 == 0:
+            acc = ((sigmoid(x @ np.asarray(w, np.float64)) > .5) == y).mean()
+            print(f"  iter {t_:3d}  accuracy {acc:.3f}")
+
+    _, w_secure = proto.train(jax.random.PRNGKey(0), client_x, client_y,
+                              iters=iters, callback=report)
+
+    w_float = float_logreg(x, y, eta=1.0, iters=iters)
+    acc_s = ((sigmoid(x @ np.asarray(w_secure, np.float64)) > .5) == y).mean()
+    acc_f = ((sigmoid(x @ w_float) > .5) == y).mean()
+    print(f"\nfinal accuracy: COPML {acc_s:.3f} vs float logreg {acc_f:.3f}"
+          f"  (paper Fig. 4: parity within ~1.3 points)")
+
+
+if __name__ == "__main__":
+    main()

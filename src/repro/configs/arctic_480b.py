@@ -1,0 +1,19 @@
+"""arctic-480b [moe] -- 128 experts top-2 + dense residual branch.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+AdamW's unfactored f32 states do not fit v5e HBM at this size on a 256-chip
+pod; the config selects Adafactor (factored second moment) -- see DESIGN.md.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv=8, d_ff=4864,
+    vocab=32000, head_dim=128,
+    n_experts=128, top_k=2, dense_residual=True,
+    optimizer="adafactor",
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=48,
+                      vocab=256, head_dim=16, n_experts=8, top_k=2)

@@ -1,0 +1,33 @@
+"""Config registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = (
+    "qwen3-1.7b",
+    "qwen2.5-3b",
+    "smollm-360m",
+    "llama3.2-3b",
+    "falcon-mamba-7b",
+    "qwen3-moe-30b-a3b",
+    "arctic-480b",
+    "whisper-tiny",
+    "zamba2-2.7b",
+    "internvl2-2b",
+    "copml-logreg",        # the paper's own workload, as an arch
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f".{arch.replace('-', '_').replace('.', '_')}", __package__)
+    return mod.CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(
+        f".{arch.replace('-', '_').replace('.', '_')}", __package__)
+    return mod.SMOKE

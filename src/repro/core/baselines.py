@@ -1,0 +1,154 @@
+"""Benchmark protocols from the paper's Section V.
+
+1. float_logreg       -- conventional logistic regression (Fig. 4 baseline).
+2. MpcBaseline        -- the [BGW88]/[BH08] MPC training baselines with the
+   paper's subgroup optimization (Appendix D): clients are split into G=3
+   subgroups; subgroup i holds Shamir shares of one third of X and computes
+   its sub-gradient *entirely in the share domain* -- every matmul and the
+   polynomial sigmoid require secure multiplications with degree reduction,
+   which is exactly the communication the paper's Table I shows dominating.
+
+The MPC baseline shares COPML's quantization/truncation machinery so the
+accuracy comparison isolates the *protocol* difference, as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field, mpc, quantize, shamir, sigmoid_approx, truncation
+from .protocol import CopmlConfig, derive_update_constants
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + np.exp(-z))
+
+
+def float_logreg(x, y, eta: float, iters: int, callback=None):
+    """Conventional full-batch GD logistic regression (paper Fig. 4)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m, d = x.shape
+    w = np.zeros(d)
+    for t in range(iters):
+        w -= eta / m * (x.T @ (sigmoid(x @ w) - y))
+        if callback is not None:
+            callback(t, w)
+    return w
+
+
+def float_poly_logreg(x, y, eta: float, iters: int, r: int = 1,
+                      bound: float = 10.0):
+    """Float GD with the degree-r polynomial sigmoid -- isolates the
+    approximation error from the quantization error."""
+    coeffs = sigmoid_approx.fit_sigmoid_poly(r, bound)
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    m, d = x.shape
+    w = np.zeros(d)
+    for _ in range(iters):
+        ghat = sigmoid_approx.poly_eval_float(coeffs, x @ w)
+        w -= eta / m * (x.T @ (ghat - y))
+    return w
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MpcState:
+    w_shares: jnp.ndarray      # (N, d) model shares (shared across all groups)
+    x_shares: jnp.ndarray      # (G, N_g, m/G, d) per-subgroup data shares
+    xty_shares: jnp.ndarray    # (G, N_g, d)
+    step: jnp.ndarray | int = 0
+
+
+class MpcBaseline:
+    """Secret-shared logistic regression per Appendix D (G subgroups)."""
+
+    def __init__(self, cfg: CopmlConfig, m: int, d: int, groups: int = 3,
+                 scheme: str = "bh08"):
+        self.cfg, self.m, self.d, self.g = cfg, m, d, groups
+        self.n_g = cfg.n_clients // groups      # clients per subgroup
+        assert self.n_g >= 2 * cfg.t + 1, "subgroup too small for 2T+1"
+        self.lambdas = tuple(range(1, self.n_g + 1))
+        self.q_eta, self.e, self.k1, self.k2 = derive_update_constants(cfg, m)
+        scales = [cfg.lg - i * cfg.lz for i in range(cfg.r + 1)]
+        self.poly_coeffs = sigmoid_approx.quantized_coeffs(
+            cfg.r, cfg.lx, scales, cfg.sigmoid_bound)
+        self._mul = mpc.mul_bh08 if scheme == "bh08" else mpc.mul_bgw
+        self.scheme = scheme
+
+    def setup(self, key, x, y) -> MpcState:
+        cfg = self.cfg
+        per = self.m // self.g
+        keys = jax.random.split(key, 2 * self.g + 1)
+        xq = quantize.quantize(jnp.asarray(x[: per * self.g]), cfg.lx)
+        yq = quantize.quantize(
+            jnp.asarray(y[: per * self.g], jnp.float32), cfg.lg)
+        xg = xq.reshape(self.g, per, self.d)
+        yg = yq.reshape(self.g, per)
+        x_shares, xty = [], []
+        for gi in range(self.g):
+            xs = shamir.share(keys[2 * gi], xg[gi], cfg.t, self.n_g,
+                              self.lambdas)
+            ys = shamir.share(keys[2 * gi + 1], yg[gi], cfg.t, self.n_g,
+                              self.lambdas)
+            x_shares.append(xs)
+            xty.append(self._mul(
+                keys[2 * gi], jnp.swapaxes(xs, 1, 2), ys[..., None],
+                cfg.t, matmul=True, points=self.lambdas)[..., 0])
+        w = shamir.share(keys[-1], jnp.zeros((self.d,), field.FIELD_DTYPE),
+                         cfg.t, self.n_g, self.lambdas)
+        return MpcState(w_shares=w, x_shares=jnp.stack(x_shares),
+                        xty_shares=jnp.stack(xty))
+
+    def iteration(self, key, state: MpcState) -> MpcState:
+        """One GD step fully in the share domain (per subgroup), then
+        aggregate sub-gradients (local add) and secure-truncate-update."""
+        cfg = self.cfg
+        keys = jax.random.split(key, self.g + 1)
+        grad_shares = None
+        for gi in range(self.g):
+            xs = state.x_shares[gi]                       # (N_g, mG, d)
+            # z = X w : secure matmul (degree reduction!)
+            z = self._mul(keys[gi], xs, jnp.broadcast_to(
+                state.w_shares[:, :, None],
+                (self.n_g, self.d, 1)), cfg.t, matmul=True,
+                points=self.lambdas)[..., 0]              # (N_g, mG)
+            # ghat(z) in the share domain: Horner => r secure mults
+            acc = jnp.full_like(z, int(self.poly_coeffs[-1]))
+            for ci in range(len(self.poly_coeffs) - 2, -1, -1):
+                acc = self._mul(jax.random.fold_in(keys[gi], ci), acc, z,
+                                cfg.t, points=self.lambdas)
+                acc = mpc.add_public(acc, int(self.poly_coeffs[ci]))
+            # X^T ghat : secure matmul
+            xtg = self._mul(jax.random.fold_in(keys[gi], 99),
+                            jnp.swapaxes(xs, 1, 2), acc[..., None],
+                            cfg.t, matmul=True,
+                            points=self.lambdas)[..., 0]  # (N_g, d)
+            g_sh = field.sub(xtg, state.xty_shares[gi])
+            grad_shares = g_sh if grad_shares is None else field.add(
+                grad_shares, g_sh)
+        scaled = field.mul_scalar(grad_shares, self.q_eta)
+        delta = truncation.trunc_pr(keys[-1], scaled, self.k1, self.k2,
+                                    cfg.t, self.lambdas)
+        return dataclasses.replace(
+            state, w_shares=field.sub(state.w_shares, delta),
+            step=state.step + 1)
+
+    def train(self, key, x, y, iters: int):
+        ks, ki = jax.random.split(key)
+        state = self.setup(ks, x, y)
+        step = jax.jit(self.iteration)
+        for t in range(iters):
+            state = step(jax.random.fold_in(ki, t), state)
+        return state, self.open_model(state)
+
+    def open_model(self, state: MpcState):
+        w = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
+        return quantize.dequantize(w, self.cfg.lw)

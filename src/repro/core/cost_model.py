@@ -1,0 +1,94 @@
+"""Communication/computation cost model (paper Table II + Appendix C/D).
+
+Used by benchmarks/fig3_speedup.py to reproduce the paper's Fig. 3 / Table I
+on the EC2-like WAN parameters (40 Mbps, m3.xlarge) and by the roofline
+analysis to price the COPML collective traffic on TPU ICI.
+
+All counts are per-client, per the paper's Section V-C accounting, in field
+elements (multiply by ~bytes_per_elem for bytes; the paper's 64-bit impl
+ships 8 B/elem, our int32 impl ships 4 B/elem).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WanParams:
+    bandwidth_mbps: float = 40.0       # paper Section V-A
+    latency_s: float = 0.05            # WAN RTT ~ 100 ms
+    # measured on this host by benchmarks/kernel_micro.py; the paper's
+    # m3.xlarge achieves a similar order for 64-bit modular matmul
+    field_macs_per_s: float = 2.0e8
+    bytes_per_elem: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    m: int
+    d: int
+    n: int
+    k: int
+    t: int
+    iters: int
+    r: int = 1
+
+
+def copml_costs(w: Workload, hw: WanParams = WanParams()) -> dict:
+    """Per-client costs of COPML (Table II row).
+
+    comm elements:  (m/K)dN  (dataset coded slices)  +  dNJ (model encodings)
+                    + dNJ (local computation shares)
+    compute MACs:   (m/K)d^2 J     (Eq. 7 matmul pair, dominant)
+    encoding MACs:  (m/K)dN(K+T)   +  dN(K+T)J
+    """
+    m, d, n, k, t, j = w.m, w.d, w.n, w.k, w.t, w.iters
+    comm_elems = m * d * n / k + 2 * d * n * j
+    # X~ w~  +  X~^T g  as matvec chain: 2*(m/K)*d MACs per iteration.  (The
+    # paper prices the Gram form O(m d^2 / K); the matvec chain is strictly
+    # cheaper for J < d/2 and is what our implementation does.)
+    comp_macs = 2.0 * (m / k) * d * j
+    enc_macs = (m / k) * d * n * (k + t) + d * n * (k + t) * j
+    return _price(comm_elems, comp_macs, enc_macs, hw, rounds=3 * j + 2)
+
+
+def mpc_baseline_costs(w: Workload, hw: WanParams = WanParams(),
+                       scheme: str = "bh08", groups: int = 3) -> dict:
+    """Per-client costs of the optimized Appendix-D baselines.
+
+    The baselines perform degree reduction PER MULTIPLICATION GATE (the
+    paper: "intensive communication and computation to carry out a degree
+    reduction step for secure multiplication").  Gates per iteration per
+    subgroup: z = Xw has (m/G)*d scalar gates, the degree-r Horner chain
+    r*(m/G), X^T ghat another (m/G)*d.  Per client per gate: BH08 masks +
+    opens one value (~2 elements on the wire); BGW re-shares to all N_g.
+    This accounting reproduces the paper's Table I within ~2x:
+    BGW 21142 s, BH08 6812 s comm at N=50/CIFAR-10.
+    """
+    m, d, n, j = w.m, w.d, w.n, w.iters
+    n_g = max(1, n // groups)
+    gates_per_iter = 2.0 * (m / groups) * d + w.r * (m / groups)
+    per_gate = float(n_g) if scheme == "bgw" else 2.0
+    comm_elems = (m / n) * d * n_g                 # initial data sharing
+    comm_elems += gates_per_iter * per_gate * j
+    comp_macs = 2.0 * (m / groups) * d * j         # local share matmuls
+    enc_macs = gates_per_iter * n_g * j            # reduction encode/decode
+    return _price(comm_elems, comp_macs, enc_macs, hw,
+                  rounds=(2 + w.r) * j + 1)
+
+
+def _price(comm_elems, comp_macs, enc_macs, hw: WanParams, rounds: int) -> dict:
+    comm_s = comm_elems * hw.bytes_per_elem * 8 / (hw.bandwidth_mbps * 1e6)
+    comm_s += rounds * hw.latency_s
+    comp_s = comp_macs / hw.field_macs_per_s
+    enc_s = enc_macs / hw.field_macs_per_s
+    return {"comm_s": comm_s, "comp_s": comp_s, "enc_s": enc_s,
+            "total_s": comm_s + comp_s + enc_s}
+
+
+def speedup(w: Workload, hw: WanParams = WanParams(),
+            scheme: str = "bh08") -> float:
+    base = mpc_baseline_costs(w, hw, scheme)["total_s"]
+    ours = copml_costs(w, hw)["total_s"]
+    return base / ours

@@ -1,0 +1,37 @@
+"""Mesh-aware sharding constraint helper, usable from any layer."""
+
+from __future__ import annotations
+
+import jax
+
+
+def maybe_constrain(x, *spec):
+    """with_sharding_constraint iff a usable mesh is active (jax.set_mesh).
+
+    Axes absent from the mesh or not dividing the dim are dropped, so the
+    same code runs on a laptop and on the 512-chip production mesh."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:   # noqa: BLE001
+        return x
+    if mesh is None or not mesh.shape:
+        return x
+    fixed = []
+    for dim, entry in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in entries if a in mesh.shape)
+        size = 1
+        for a in kept:
+            size *= mesh.shape[a]
+        if not kept or dim % size:
+            fixed.append(None)
+        else:
+            fixed.append(kept if len(kept) > 1 else kept[0])
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+CLIENTS = ("pod", "data", "model")   # the COPML client axis spans the mesh

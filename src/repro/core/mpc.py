@@ -1,0 +1,93 @@
+"""Share-level MPC primitives (paper Appendix C).
+
+All values are Shamir-shared with threshold T across N clients; share arrays
+carry the client axis first: (N, ...).  Operations:
+
+* add / sub / mul-by-public-constant: LOCAL (no communication) -- these are
+  the only ops COPML's encode/decode needs (Remark 3), which is the source of
+  its speedup over the baselines.
+* mul (share x share): requires degree reduction.  Two implementations:
+    - BGW [2]:   local product -> re-share -> recombine.   O(N^2) messages.
+    - BH08 [3]:  offline pair ([rho]_T, [rho]_2T); online mask, open, re-mask.
+                 O(N) broadcasts.
+  Both are implemented for real on the share arrays; the cost model in
+  cost_model.py accounts their communication.
+
+The "clients" axis is a plain leading array axis here; launch/ maps it onto
+the production mesh's data axis with shard_map (each device then literally
+holds one client's shares and collectives realize the exchanges).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import field, shamir
+
+
+def add(xs, ys):
+    return field.add(xs, ys)
+
+
+def sub(xs, ys):
+    return field.sub(xs, ys)
+
+
+def mul_public(xs, c: int):
+    return field.mul_scalar(xs, c)
+
+
+def add_public(xs, c: int):
+    """Add a public constant: by convention added to every share (the
+    constant is embedded as the degree-0 coefficient on all shares)."""
+    return field.add(xs, jnp.full_like(xs, int(c) % field.P))
+
+
+def _local_product(xs, ys, matmul: bool):
+    if matmul:
+        return jax.vmap(field.matmul)(xs, ys)
+    return field.mul(xs, ys)
+
+
+def mul_bgw(key, xs, ys, t: int, *, matmul: bool = False,
+            points: Sequence[int] | None = None):
+    """BGW multiplication: local product (degree 2T shares) + re-share.
+
+    Requires N >= 2T+1.  If matmul=True, xs:(N,A,B) @ ys:(N,B,C).
+    """
+    n = xs.shape[0]
+    assert n >= 2 * t + 1, "BGW needs N >= 2T+1"
+    prod = _local_product(xs, ys, matmul)
+    return shamir.reshare(key, prod, t, n, points)
+
+
+def mul_bh08(key, xs, ys, t: int, *, matmul: bool = False,
+             points: Sequence[int] | None = None):
+    """[BH08] multiplication with an offline random pair.
+
+    Offline: rho random; [rho]_T and [rho]_2T dealt.
+    Online:  open d = x*y - rho from degree-2T shares (needs 2T+1 of them),
+             output [rho]_T + d  (local add of a now-public value).
+    """
+    n = xs.shape[0]
+    assert n >= 2 * t + 1, "BH08 needs N >= 2T+1 to open the 2T-degree mask"
+    if points is None:
+        points = shamir.default_eval_points(n)
+    prod = _local_product(xs, ys, matmul)  # (N, ...) degree-2T shares
+    k_rho, k_t, k_2t = jax.random.split(key, 3)
+    rho = field.random_field(k_rho, prod.shape[1:])
+    rho_t = shamir.share(k_t, rho, t, n, points)
+    rho_2t = shamir.share(k_2t, rho, 2 * t, n, points)
+    masked = field.sub(prod, rho_2t)
+    # "broadcast and open": interpolate the degree-2T sharing at z=0
+    opened = shamir.reconstruct(masked, 2 * t, points)
+    return field.add(rho_t, opened[None])
+
+
+def open_shares(xs, t: int, points: Sequence[int] | None = None,
+                subset: Sequence[int] | None = None):
+    """Publicly reconstruct a shared value (e.g. the final model w^(J))."""
+    return shamir.reconstruct(xs, t, points, subset)

@@ -1,0 +1,286 @@
+"""COPML: the full training protocol (paper Algorithm 1) over N virtual clients.
+
+One process simulates all N clients; every share array carries the client
+axis first.  Each step below is annotated with its MPC character
+(LOCAL = no communication; EXCHANGE = point-to-point shares; OPEN = broadcast
++ reconstruct), which cost_model.py prices for the Fig-3/Table-I benchmarks,
+and which launch/copml_dist.py maps onto mesh collectives.
+
+Fixed-point scale plumbing (the part the paper leaves implicit, Appendix A):
+
+  X quantized at 2^lx, w at 2^lw  =>  z = Xw at lz = lx+lw.
+  ghat coefficients quantized so ghat(z) comes out at lg = lz + cb
+  (cb = coefficient precision bits).
+  coded gradient  f = X~^T ghat(X~ w~)  at s_grad = lx + lg.
+  update: multiply by public  q_eta ~= (eta/m) * 2^e, then TruncPr by
+  2^{k1}, k1 = s_grad + e - lw, returning to scale lw.
+
+All intermediate *true* values must stay within (-2^{mag_bits} - 1, ...)
+* 2^{scale} < p/2; auto_scales() solves the bit budget and asserts it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field, lagrange, meshutil, mpc, quantize, shamir, sigmoid_approx, truncation
+
+
+@dataclasses.dataclass(frozen=True)
+class CopmlConfig:
+    n_clients: int
+    k: int                   # parallelization (dataset split)
+    t: int                   # privacy threshold
+    r: int = 1               # sigmoid polynomial degree
+    eta: float = 1.0
+    # fixed-point scales (None => auto from m at setup time)
+    lx: int = 2
+    lw: int = 3
+    cb: int = 6
+    k1: int | None = None
+    k2: int = 24
+    mag_bits: int = 10       # headroom for |X^T(ghat-y)| true magnitude
+    sigmoid_bound: float = 10.0
+    mpc_mul: str = "bh08"    # "bh08" | "bgw"
+
+    @property
+    def lz(self) -> int:
+        return self.lx + self.lw
+
+    @property
+    def lg(self) -> int:
+        return self.lz + self.cb
+
+    @property
+    def s_grad(self) -> int:
+        return self.lx + self.lg
+
+    @property
+    def recovery_threshold(self) -> int:
+        return lagrange.recovery_threshold(self.r, self.k, self.t)
+
+    def validate(self):
+        assert self.n_clients >= self.recovery_threshold, (
+            f"N={self.n_clients} < recovery threshold "
+            f"{self.recovery_threshold} = (2r+1)(K+T-1)+1")
+        assert self.n_clients >= 2 * self.t + 1, "MPC mult needs N >= 2T+1"
+        assert self.mag_bits + self.s_grad + 2 <= field.P_BITS, (
+            "fixed-point budget exceeds field size")
+
+
+def case1_params(n: int, r: int = 1) -> tuple:
+    """Paper Case 1 (max parallelization): K = floor((N-1)/(2r+1)), T = 1."""
+    return max(1, (n - 1) // (2 * r + 1)), 1
+
+
+def case2_params(n: int, r: int = 1) -> tuple:
+    """Paper Case 2 (equal split), stated for r=1:
+    T = floor((N-3)/6), K = floor((N+2)/3) - T."""
+    t = max(1, (n - 3) // 6)
+    k = max(1, (n + 2) // 3 - t)
+    return k, t
+
+
+def derive_update_constants(cfg: CopmlConfig, m: int) -> tuple:
+    """(q_eta, e, k1, k2): eta/m ~= q_eta / 2^e, q_eta a small public int.
+
+    k2 auto-widens (up to log2 p - 1) when the derived k1 would collide with
+    the configured k2 -- large m pushes the truncation deeper."""
+    e = int(round(math.log2(m / cfg.eta))) + 1
+    q_eta = max(1, int(round(cfg.eta / m * (1 << e))))
+    k1 = cfg.k1 if cfg.k1 is not None else cfg.s_grad + e - cfg.lw
+    k2 = max(cfg.k2, min(field.P_BITS - 1, k1 + 1))
+    assert 0 < k1 < k2 <= field.P_BITS - 1, (k1, k2)
+    return q_eta, e, k1, k2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CopmlState:
+    """Everything clients hold after the one-time setup."""
+    w_shares: jnp.ndarray        # (N, d)       Shamir shares of w^(t)
+    coded_x: jnp.ndarray         # (N, mk, d)   clear coded slices X~_i
+    xty_shares: jnp.ndarray      # (N, d)       shares of X^T y (scale lx+lg)
+    step: jnp.ndarray | int = 0
+
+
+class Copml:
+    """Functional COPML protocol driver (jit-friendly)."""
+
+    def __init__(self, cfg: CopmlConfig, m: int, d: int):
+        cfg.validate()
+        self.cfg = cfg
+        self.m, self.d = m, d
+        n, k, t = cfg.n_clients, cfg.k, cfg.t
+        self.alphas, self.betas = lagrange.default_points(n, k, t)
+        self.lambdas = tuple(range(k + t + 1 + n, k + t + 1 + 2 * n))
+        self.q_eta, self.e, self.k1, self.k2 = derive_update_constants(cfg, m)
+        # field coefficients of ghat at output scale lg given input scale lz
+        scales = [cfg.lg - i * cfg.lz for i in range(cfg.r + 1)]
+        self.poly_coeffs = sigmoid_approx.quantized_coeffs(
+            cfg.r, cfg.lx, scales, cfg.sigmoid_bound)
+        self._mul = mpc.mul_bh08 if cfg.mpc_mul == "bh08" else mpc.mul_bgw
+
+    # ------------------------------------------------------------------ setup
+
+    def setup(self, key, client_xs: Sequence, client_ys: Sequence) -> CopmlState:
+        """Phases 1-2 (one-time): quantize, secret-share, LCC-encode, X^T y.
+
+        client_xs[j]: (m_j, d) float arrays; client_ys[j]: (m_j,) in {0,1}.
+        """
+        cfg, n = self.cfg, self.cfg.n_clients
+        keys = jax.random.split(key, n + 4)
+
+        # Phase 1 (LOCAL): quantize into F_p
+        xq = [quantize.quantize(jnp.asarray(x), cfg.lx) for x in client_xs]
+        yq = [quantize.quantize(jnp.asarray(y, jnp.float32), cfg.lg)
+              for y in client_ys]
+
+        # Phase 2a (EXCHANGE): Shamir-share every client's data
+        x_shares = jnp.concatenate(
+            [shamir.share(keys[j], xq[j], cfg.t, n, self.lambdas)
+             for j in range(n)], axis=1)                      # (N, m, d)
+        y_shares = jnp.concatenate(
+            [shamir.share(keys[j], yq[j], cfg.t, n, self.lambdas)
+             for j in range(n)], axis=1)                      # (N, m)
+
+        # Phase 2b (LOCAL on shares): partition rows into K blocks
+        blocks, self.pad = jax.vmap(
+            lambda s: lagrange.partition_rows(s, cfg.k)[0])(x_shares), 0
+        # blocks: (N, K, mk, d)
+
+        # shared random masks Z_{K+1..K+T} (offline randomness, fn. 3)
+        z = field.random_field(keys[n], (cfg.t, blocks.shape[2], self.d))
+        z_shares = shamir.share(keys[n + 1], z, cfg.t, n, self.lambdas)
+        # (N, T, mk, d)
+
+        # Phase 2c (LOCAL): LCC-encode the shares; (EXCHANGE): reconstruct
+        # each client's coded slice from T+1 shares (fn. 4: subgrouping)
+        enc = jax.vmap(lambda b, zz: lagrange.lcc_encode(
+            b, zz, self.alphas, self.betas))(blocks, z_shares)
+        # enc: (N_holder, N_owner, mk, d); reconstruct over holders
+        coded_x = shamir.reconstruct(enc, cfg.t, self.lambdas)  # (N, mk, d)
+
+        # Phase 2d: X^T y via one secure matmul (degree reduction included)
+        xty_shares = self._mul(
+            keys[n + 2],
+            jnp.swapaxes(x_shares, 1, 2), y_shares[..., None],
+            cfg.t, matmul=True, points=self.lambdas)[..., 0]    # (N, d)
+
+        # model init within MPC: w^(0) = 0 shared
+        w_shares = shamir.share(
+            keys[n + 3], jnp.zeros((self.d,), field.FIELD_DTYPE),
+            cfg.t, n, self.lambdas)
+        return CopmlState(w_shares=w_shares, coded_x=coded_x,
+                          xty_shares=xty_shares)
+
+    # ------------------------------------------------------- one GD iteration
+
+    def encode_model(self, key, w_shares):
+        """Phase 2 per-iteration: Lagrange-encode w from its shares.
+
+        LOCAL on shares + EXCHANGE to reconstruct w~_j at client j.
+        v(beta_k) = w for all k in [K]; T random vectors v_k pad the tail.
+        """
+        cfg, n = self.cfg, self.cfg.n_clients
+        v = field.random_field(key, (cfg.t, self.d))
+        v_shares = shamir.share(key, v, cfg.t, n, self.lambdas)  # (N,T,d)
+        blocks = jnp.broadcast_to(
+            w_shares[:, None], (n, cfg.k, self.d))               # same w in K slots
+        enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
+            b[:, None, :], vv[:, None, :], self.alphas, self.betas
+        )[:, 0, :])(blocks, v_shares)                            # (N_holder,N_owner,d)
+        # keep enc holder-sharded: otherwise GSPMD all-gathers every
+        # holder's (K+T, d) limb stack (~1 GiB/step at N=256, the dominant
+        # collective of the baseline -- EXPERIMENTS.md Perf, COPML iter 2);
+        # reconstruct from ALL N shares so the contraction reduce-scatters.
+        enc = meshutil.maybe_constrain(enc, meshutil.CLIENTS)
+        out = shamir.reconstruct(enc, cfg.t, self.lambdas, subset="all")
+        return meshutil.maybe_constrain(out, meshutil.CLIENTS)   # (N, d)
+
+    def local_gradient(self, coded_x, coded_w):
+        """Phase 3 (LOCAL, the hot loop): f(X~_i, w~_i) = X~_i^T ghat(X~_i w~_i).
+
+        Pure field compute on *clear coded* data -- this is what the Pallas
+        kernels accelerate (kernels/ops.coded_gradient).
+        """
+        from ..kernels import ops as kernel_ops
+        return jax.vmap(lambda x, w: kernel_ops.coded_gradient(
+            x, w, self.poly_coeffs))(coded_x, coded_w)           # (N, d)
+
+    def decode_and_update(self, key, state: CopmlState, f_values,
+                          subset: Sequence[int] | None = None):
+        """Phase 4: share f, decode on shares, secure model update."""
+        cfg, n = self.cfg, self.cfg.n_clients
+        kf, kt = jax.random.split(key)
+        rthr = cfg.recovery_threshold
+        if subset is None:
+            subset = tuple(range(rthr))
+        subset = tuple(subset)[:rthr]
+
+        # EXCHANGE: each client shares its local result
+        f_shares = shamir.share_batch(kf, f_values, cfg.t, n,
+                                      self.lambdas)  # (N_owner, N_holder, d)
+
+        # EXCHANGE: transpose owner<->holder (all-to-all on the mesh), then
+        # decode LOCALLY per holder.  Decoding before the transpose makes
+        # GSPMD all-reduce a (K, N, d) tensor -- ~K x more wire bytes than
+        # the (N, d) exchange the protocol actually needs (EXPERIMENTS.md
+        # section Perf, COPML cell, iteration 1).
+        per_holder = meshutil.maybe_constrain(
+            jnp.swapaxes(f_shares, 0, 1), meshutil.CLIENTS)
+        # (N_holder, N_owner, d); each holder decodes from its R rows
+        sub_alphas = [self.alphas[i] for i in subset]
+        dmat = jnp.asarray(lagrange.decode_matrix(
+            sub_alphas, self.betas[: cfg.k]))                     # (K, R)
+        # sum over K commutes with the decode matmul: fold it into ONE
+        # matvec row  (sum_k D[k, :]) @ evals  -- K x less local work
+        dsum = dmat.reshape(1, cfg.k, -1)
+        dvec = dsum[0, 0]
+        for kk in range(1, cfg.k):
+            dvec = field.add(dvec, dsum[0, kk])                  # (R,)
+        evals = per_holder[:, jnp.asarray(subset), :]            # (N_h, R, d)
+        xtg_shares = jax.vmap(
+            lambda e: field.matmul(dvec[None], e)[0])(evals)     # (N, d)
+
+        # LOCAL: gradient shares; then secure update with TruncPr
+        grad_shares = field.sub(xtg_shares, state.xty_shares)
+        scaled = field.mul_scalar(grad_shares, self.q_eta)
+        delta_shares = truncation.trunc_pr(
+            kt, scaled, self.k1, self.k2, cfg.t, self.lambdas)   # scale lw
+        new_w = field.sub(state.w_shares, delta_shares)
+        return dataclasses.replace(state, w_shares=new_w, step=state.step + 1)
+
+    def iteration(self, key, state: CopmlState,
+                  subset: Sequence[int] | None = None) -> CopmlState:
+        k1_, k2_ = jax.random.split(key)
+        coded_w = self.encode_model(k1_, state.w_shares)
+        f_values = self.local_gradient(state.coded_x, coded_w)
+        return self.decode_and_update(k2_, state, f_values, subset)
+
+    # ------------------------------------------------------------------ train
+
+    def train(self, key, client_xs, client_ys, iters: int,
+              subset: Sequence[int] | None = None,
+              callback=None) -> tuple:
+        ks, ki = jax.random.split(key)
+        state = self.setup(ks, client_xs, client_ys)
+        step = jax.jit(partial(self.iteration, subset=subset))
+        for t in range(iters):
+            state = step(jax.random.fold_in(ki, t), state)
+            if callback is not None:
+                callback(t, self.open_model(state))
+        return state, self.open_model(state)
+
+    def open_model(self, state: CopmlState):
+        """Reconstruct and dequantize the model (only done at the end /
+        for evaluation; during training clients hold only shares)."""
+        w_field = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
+        return quantize.dequantize(w_field, self.cfg.lw)

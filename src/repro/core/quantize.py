@@ -1,0 +1,45 @@
+"""Fixed-point quantization into F_p (paper Appendix A).
+
+phi(x) = x if x >= 0 else p + x  (two's-complement-style field embedding),
+applied to Round(2^lx * x).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import field
+
+
+def quantize(x, lx: int):
+    """Real array -> field elements.  Requires |x| * 2^lx < p/2."""
+    scaled = jnp.round(x * float(1 << lx))
+    q = scaled.astype(jnp.int32)
+    return jnp.where(q < 0, q + field.P, q).astype(field.FIELD_DTYPE)
+
+
+def dequantize(u, lx: int):
+    """Field elements -> real array (inverse of phi, then unscale).
+
+    Elements above p/2 are interpreted as negatives.
+    """
+    signed = jnp.where(u > field.P // 2, u - field.P, u)
+    return signed.astype(jnp.float32) / float(1 << lx)
+
+
+def signed_value(u):
+    """Field -> signed integer representative in (-p/2, p/2]."""
+    return jnp.where(u > field.P // 2, u - field.P, u)
+
+
+def quantization_noise_variance(d: int, m: int, k1: int) -> float:
+    """sigma^2 bound from Theorem 1: d * 2^{2(k1-1)} / m^2 ...
+
+    expressed in the *unscaled* (real) domain used by the convergence bound,
+    i.e. the variance of the secure-truncation rounding noise on the gradient.
+    The bound in the paper is stated in fixed-point units; after the eta/m
+    scaling it reduces to d / (4 m^2) per unit step in the truncated grid.
+    We report the paper's literal expression.
+    """
+    return d * float(2 ** (2 * (k1 - 1))) / float(m) ** 2

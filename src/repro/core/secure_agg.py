@@ -1,0 +1,129 @@
+"""Beyond-paper: COPML-coded secure gradient aggregation for the LM framework.
+
+The paper's technique end-to-end needs a *polynomial* forward pass, so it
+cannot wrap a transformer (DESIGN.md section 6).  What transfers to any
+architecture is the aggregation step: per-data-shard gradients g_1..g_N are
+only ever *summed* across the data axis -- a degree-1 polynomial, LCC's
+sweet spot.  This module gives the trainer:
+
+  * information-theoretic privacy of each host's gradient against any T
+    colluding hosts (Shamir threshold),
+  * K-fold per-host communication/compute reduction by partitioning the
+    gradient vector into K chunks (each chunk aggregated by a different
+    subgroup, the paper's fn.-4 subgrouping applied to aggregation --
+    the Turbo-Aggregate [35] pattern the paper cites),
+  * straggler tolerance: any T+1 holders of a chunk's shares suffice.
+
+Quantization reuses App. A (quantize.py); averaging reuses the paper's
+TruncPr secure truncation so the mean comes back at the model's scale.
+
+The functions are pure and vmap/shard_map friendly; launch/train.py wires
+them across the mesh 'data' axis, where shamir.share's N output rows become
+an all_to_all and the share-sum a psum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field, quantize, shamir, truncation
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggConfig:
+    n_clients: int            # hosts on the data axis
+    t: int = 1                # privacy threshold
+    k: int = 1                # gradient-chunk parallelization
+    lq: int = 16              # gradient fixed-point fractional bits
+    clip: float = 8.0         # pre-quantization gradient clip (range bound)
+    k2: int = 24
+
+    def validate(self):
+        assert self.n_clients >= self.t + 1
+        assert self.clip * (1 << self.lq) * self.n_clients < field.P // 2, (
+            "sum range exceeds field; lower lq or clip")
+
+
+def flatten_grads(grads) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    return flat, (treedef, shapes)
+
+
+def unflatten_grads(flat, meta):
+    treedef, shapes = meta
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def encode_local(key, grad_flat, cfg: SecureAggConfig):
+    """Client-side: clip, quantize, Shamir-share own gradient.
+
+    Returns (N, L) shares -- row i goes to host i (all_to_all on the mesh).
+    """
+    cfg.validate()
+    g = jnp.clip(grad_flat, -cfg.clip, cfg.clip)
+    q = quantize.quantize(g, cfg.lq)
+    return shamir.share(key, q, cfg.t, cfg.n_clients)
+
+
+def aggregate_shares(all_shares):
+    """Holder-side: sum incoming shares (LOCAL -- field add only).
+
+    all_shares: (N_owner, L) rows received by this holder.  Returns (L,)
+    share of sum_j g_j.
+    """
+    acc = all_shares[0]
+    for j in range(1, all_shares.shape[0]):
+        acc = field.add(acc, all_shares[j])
+    return acc
+
+
+def decode_mean(key, sum_shares, cfg: SecureAggConfig,
+                subset: Sequence[int] | None = None):
+    """Reconstruct sum from any T+1 shares, secure-truncate to the mean.
+
+    sum_shares: (N_holder, L) shares of the sum.  Uses TruncPr with
+    k1 = log2(N) so the opened value is mean = sum / N with stochastic
+    rounding (unbiased, Thm-1-compatible noise).
+    """
+    n = cfg.n_clients
+    k1 = max(1, int(round(math.log2(n))))
+    eff_n = 1 << k1                                  # exact power-of-two divisor
+    # TruncPr needs the biased value within 2^k2 <= 2^25; the sum's range is
+    # N * clip * 2^lq, so derive k2 from it:
+    k2 = min(field.P_BITS - 1,
+             int(math.ceil(math.log2(cfg.clip * (1 << cfg.lq) * n))) + 2)
+    truncated = truncation.trunc_pr(key, sum_shares, k1, k2, cfg.t)
+    opened = shamir.reconstruct(truncated, cfg.t, subset=subset)
+    mean = quantize.dequantize(opened, cfg.lq) * (eff_n / n)
+    return mean
+
+
+def secure_aggregate(key, grads_per_client, cfg: SecureAggConfig,
+                     subset: Sequence[int] | None = None):
+    """Reference (single-process) path: full round trip over a pytree list.
+
+    grads_per_client: list of N gradient pytrees (same structure).
+    Returns the privacy-preserving mean gradient pytree.
+    """
+    flats, metas = zip(*(flatten_grads(g) for g in grads_per_client))
+    keys = jax.random.split(key, cfg.n_clients + 1)
+    shares = jnp.stack([encode_local(keys[j], flats[j], cfg)
+                        for j in range(cfg.n_clients)])   # (owner, holder, L)
+    per_holder = jnp.swapaxes(shares, 0, 1)               # (holder, owner, L)
+    sum_shares = jax.vmap(aggregate_shares)(per_holder)   # (holder, L)
+    mean = decode_mean(keys[-1], sum_shares, cfg, subset)
+    return unflatten_grads(mean, metas[0])

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: finite-field matmul over F_p, p = 2^26 - 5.
+
+TPU-native adaptation of the paper's 64-bit lazy-reduction trick (App. A):
+operands are decomposed into four 7-bit limbs; the 16 limb-pair partial
+matmuls run EXACTLY on the MXU in f32 (products < 2^14, accumulated over a
+<= 1024-wide K block stays < 2^24, f32's exact-integer range); recombination
+back to F_p is pure int32 (13-bit-limb modular multiply, every intermediate
+< 2^31).  No 64-bit types anywhere -- this kernel lowers to TPU as-is.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics); the
+output block is revisited across the K dimension and accumulated in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import field
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512  # <= 1024 for exact f32 limb accumulation
+
+
+def _limb(x, i):
+    return jnp.bitwise_and(
+        jax.lax.shift_right_logical(x, 7 * i), 0x7F).astype(jnp.float32)
+
+
+def _limb_matmul_mod(a_blk, b_blk):
+    """Field matmul of one (bm, bk) x (bk, bn) block; all int32/f32.
+
+    16 MXU matmuls + int32 modular recombination.  Requires bk <= 1024.
+    """
+    acc = None
+    for i in range(4):
+        ai = _limb(a_blk, i)
+        for j in range(4):
+            bj = _limb(b_blk, j)
+            s = jnp.dot(ai, bj, preferred_element_type=jnp.float32)
+            term = field.fold26(s.astype(jnp.int32))
+            w = pow(2, 7 * (i + j), field.P)
+            term = field.mul(term, jnp.asarray(w, jnp.int32))
+            acc = term if acc is None else field.add(acc, term)
+    return acc
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = field.add(o_ref[...], _limb_matmul_mod(a_ref[...], b_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def modmatmul(a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+              bk: int = DEFAULT_BK, interpret: bool = True):
+    """(a @ b) mod p.  a: (M, K), b: (K, N) int32 field elements.
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+    assert bk <= 1024, "bk > 1024 breaks exact f32 limb accumulation"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, dispatch, fallback.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes exactly as written); on TPU set REPRO_PALLAS_INTERPRET=0.  Small
+shapes fall back to the pure-jnp reference (padding overhead would dominate).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from . import coded_gradient as _cg
+from . import field_poly as _fp
+from . import modmatmul as _mm
+from . import ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+# interpret-mode kernels are slow on CPU; route big shapes only when asked
+USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") != "0"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def modmatmul(a, b, *, bm=None, bn=None, bk=None, force_pallas: bool = False):
+    """(a @ b) mod p with padding to block multiples."""
+    if not (USE_PALLAS or force_pallas):
+        return ref.modmatmul(a, b)
+    bm = bm or min(_mm.DEFAULT_BM, max(8, a.shape[0]))
+    bn = bn or min(_mm.DEFAULT_BN, max(8, b.shape[1]))
+    bk = bk or min(_mm.DEFAULT_BK, max(8, a.shape[1]))
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    b, _ = _pad_to(b, 0, bk)
+    b, _ = _pad_to(b, 1, bn)
+    out = _mm.modmatmul(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return out  # caller slices; convenience below
+
+
+def modmatmul_exact(a, b, **kw):
+    m, n = a.shape[0], b.shape[1]
+    return modmatmul(a, b, **kw)[:m, :n]
+
+
+def poly_eval(z, coeffs, *, block=None, force_pallas: bool = False):
+    """Elementwise ghat(z) over F_p for any-shape z."""
+    if not (USE_PALLAS or force_pallas):
+        return ref.poly_eval(z, coeffs)
+    shape = z.shape
+    flat = z.reshape(-1)
+    block = block or min(_fp.DEFAULT_BLOCK, max(8, flat.shape[0]))
+    flat, pad = _pad_to(flat, 0, block)
+    out = _fp.poly_eval(flat, coeffs, block=block, interpret=INTERPRET)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)
+
+
+def coded_gradient(x, w, coeffs, *, bm=None, dc=None,
+                   force_pallas: bool = False):
+    """Fused f = x^T ghat(x w) over F_p (COPML Eq. 7)."""
+    if not (USE_PALLAS or force_pallas):
+        return ref.coded_gradient(x, w, coeffs)
+    d0 = x.shape[1]
+    bm = bm or min(_cg.DEFAULT_BM, max(8, x.shape[0]))
+    dc = dc or min(_cg.DEFAULT_DC, max(8, d0))
+    x, _ = _pad_to(x, 0, bm)
+    x, dpad = _pad_to(x, 1, dc)
+    w, _ = _pad_to(w, 0, dc)
+    out = _cg.coded_gradient(x, w, coeffs, bm=bm, dc=dc, interpret=INTERPRET)
+    return out[:d0] if dpad else out

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas_call anywhere).
+
+These are the ground truth for the per-kernel allclose sweeps in
+tests/test_kernels.py; field.np_matmul (numpy uint64, the paper's own 64-bit
+lazy-reduction arithmetic) backs them up as a second, independent oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import field
+
+
+def modmatmul(a, b):
+    """(a @ b) mod p -- jnp limb algorithm from core.field."""
+    return field.matmul(a, b)
+
+
+def poly_eval(z, coeffs):
+    """Horner over F_p."""
+    return field.evaluate_poly_dyn(coeffs, z)
+
+
+def coded_gradient(x, w, coeffs):
+    """f = x^T ghat(x w) over F_p, unfused two-pass reference."""
+    z = field.matmul(x, w[:, None])[:, 0]
+    g = field.evaluate_poly_dyn(coeffs, z)
+    return field.matmul(x.T, g[:, None])[:, 0]

@@ -1,0 +1,123 @@
+"""COPML on the production mesh: one client per device.
+
+The paper's N clients map onto the flattened mesh (DESIGN.md section 3.1):
+every share/coded array carries the client axis first, sharded over ALL mesh
+axes, so each device holds exactly what a real client would hold.  The
+protocol's exchanges lower to collectives under GSPMD:
+
+  share distribution (owner, holder) transpose  -> all-to-all
+  reconstruction (matmul over the client axis)  -> reduce-scatter/all-reduce
+  share-of-sum aggregation                      -> all-reduce
+
+Dry-run cells (invoked from launch/dryrun.py for --arch copml-logreg):
+shape names map to paper-scale and pod-scale workloads:
+
+  train_4k    -> CIFAR-10 scale (m=9019, d=3073), paper Case 2 at N=mesh size
+  prefill_32k -> GISETTE scale (m=6000, d=5000)
+  decode_32k  -> pod-scale (m=262144, d=4096)
+  long_500k   -> skipped (no analogue; noted in DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import field
+from ..core.protocol import Copml, CopmlConfig, CopmlState, case2_params
+from . import roofline as RL
+
+_SHAPE_MAP = {
+    "train_4k": ("cifar10-scale", 9019, 3073),
+    "prefill_32k": ("gisette-scale", 6000, 5000),
+    "decode_32k": ("pod-scale", 262144, 4096),
+}
+
+# field MACs per train iteration (Table II, matvec-chain evaluation):
+# encode w: d*N*(K+T); local grad: 2*(m/K)*d per client; decode: d*R per
+# block; all clients in parallel.  1 field MAC ~ 16 f32 MXU MACs + ~40 int32
+# VPU ops under the limb decomposition (DESIGN.md section 3.2); we price it
+# at 16 MXU-equivalent flops for the compute term.
+FIELD_MAC_FLOPS = 16.0
+
+
+def make_protocol(n: int, m: int, d: int) -> Copml:
+    k, t = case2_params(n)
+    # The truncation depth k1 = 2*lx + cb + log2(m/eta) must stay below
+    # log2(p): with the paper's 26-bit field, m beyond ~2^14 forces either
+    # coarser quantization or a larger step size.  We scale eta with m
+    # (documented scalability limit of the 26-bit field, EXPERIMENTS.md).
+    eta = max(1.0, m / 4096.0)
+    cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=eta)
+    return Copml(cfg, m, d)
+
+
+def client_sharding(mesh):
+    """Client axis over every mesh axis: one client per device."""
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def state_structs(proto: Copml, mesh):
+    n, d = proto.cfg.n_clients, proto.d
+    mk = -(-proto.m // proto.cfg.k)
+    cl = client_sharding(mesh)
+    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32, sharding=cl)
+    return CopmlState(
+        w_shares=sds((n, d)),
+        coded_x=sds((n, mk, d)),
+        xty_shares=sds((n, d)),
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+    )
+
+
+def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
+    if shape_name not in _SHAPE_MAP:
+        return {"arch": "copml-logreg", "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped (no long-context analogue for secure "
+                          "logistic regression)"}
+    tag, m, d = _SHAPE_MAP[shape_name]
+    n = mesh.size
+    proto = make_protocol(n, m, d)
+    cfg = proto.cfg
+    state = state_structs(proto, mesh)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                               sharding=NamedSharding(mesh, P()))
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(proto.iteration).lower(key, state)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    mk = -(-m // cfg.k)
+    macs = (d * n * (cfg.k + cfg.t)            # encode w
+            + 2.0 * mk * d                      # local coded gradient
+            + d * cfg.recovery_threshold * cfg.k  # decode
+            ) * n                               # per client, N clients
+    mflops = macs * FIELD_MAC_FLOPS
+    rf = RL.analyze(f"copml/{tag}", compiled, mesh.size, mflops)
+    rec = rf.to_dict()
+    rec.update({
+        "arch": "copml-logreg", "shape": shape_name, "workload": tag,
+        "mesh": "multipod" if multi_pod else "pod", "status": "ok",
+        "n_clients": n, "K": cfg.k, "T": cfg.t,
+        "recovery_threshold": cfg.recovery_threshold,
+        "bytes_per_device": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "peak": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes),
+        },
+    })
+    print(f"--- copml-logreg[{tag}] x {'multipod(512)' if multi_pod else 'pod(256)'}"
+          f" N={n} K={cfg.k} T={cfg.t} R={cfg.recovery_threshold} ---")
+    print(f"memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB")
+    print(f"roofline: compute={rf.compute_s*1e3:.3f}ms "
+          f"memory={rf.memory_s*1e3:.3f}ms "
+          f"collective={rf.collective_s*1e3:.3f}ms dominant={rf.dominant}")
+    return rec

@@ -1,0 +1,165 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (global totals).
+collective_bytes is parsed from the post-SPMD HLO: for each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+per-device result-shape bytes (post-SPMD shapes are per-shard), apply a
+ring-model factor, and multiply by chips to get the global count the
+formula above divides back down.
+
+v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\(([^)]*)\)|((?:\w+)\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# ring-model bytes-on-wire per device, as a multiple of the RESULT bytes
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes on the wire, by collective kind + total."""
+    out = {k: 0.0 for k in _FACTORS}
+    counts = {k: 0 for k in _FACTORS}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(4)
+        shapes_txt = m.group(2) or m.group(3) or ""
+        b = _shape_bytes(shapes_txt)
+        out[kind] += b * _FACTORS[kind]
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _FACTORS)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes_per_device: float
+    model_flops: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # per-device bytes / per-chip ICI bw == global/(chips*bw)
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the *useful* work runs to the binding roofline term:
+        (MODEL_FLOPS / peak) / bound_s."""
+        if not self.model_flops or not self.bound_s:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N_active for MoE); decode/prefill
+    use 2*N*tokens (forward only) + attention KV term."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + KV attention reads
+    tokens = shape.global_batch
+    attn = 0.0
+    if cfg.n_heads:
+        attn = (4.0 * cfg.n_layers * cfg.n_heads * cfg.hd * shape.seq_len
+                * tokens)
+    return 2.0 * n_active * tokens + attn
+
+
+def analyze(name, compiled, chips: int, mflops: float) -> Roofline:
+    """Loop-aware counts from the post-SPMD HLO (hlo_counter.py).
+
+    XLA's cost_analysis() counts while bodies once -- useless under
+    scan-over-layers -- so we parse and loop-correct the HLO ourselves.
+    Parsed counts are per-device; we scale to global so the roofline
+    formulas (global / (chips * peak)) read naturally.
+    """
+    from . import hlo_counter
+    c = hlo_counter.analyze_hlo(compiled.as_text())
+    return Roofline(name=name, chips=chips,
+                    hlo_flops=c.flops * chips,
+                    hlo_bytes=c.bytes * chips,
+                    coll_bytes_per_device=c.coll_bytes,
+                    model_flops=mflops)

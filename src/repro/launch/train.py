@@ -1,0 +1,51 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 8 --seq 256 --ckpt /tmp/ckpt
+
+Uses the reduced (smoke) config by default on CPU hosts; pass --full for the
+assigned production config (sized for the v5e meshes, see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import registry
+from ..train import trainer
+from . import mesh as mesh_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m",
+                    choices=[a for a in registry.ARCH_IDS
+                             if a != "copml-logreg"])
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.smoke_config(args.arch))
+    tcfg = trainer.TrainConfig(
+        steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        microbatch=args.microbatch, loss_chunk=args.loss_chunk,
+        ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every)
+    mesh = mesh_lib.make_host_mesh(args.model_parallel) \
+        if len(jax.devices()) > 1 else None
+    params, history = trainer.train(cfg, tcfg, mesh=mesh)
+    print(f"final loss: {history[-1]['loss']:.4f} "
+          f"({cfg.name}, {args.steps} steps)")
+
+
+if __name__ == "__main__":
+    main()

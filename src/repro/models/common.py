@@ -1,0 +1,148 @@
+"""Shared transformer building blocks (pure JAX, shard-friendly).
+
+Attention is implemented flash-style: an online-softmax scan over KV chunks,
+so prefill at 32k context never materializes the (S, S) score matrix.  All
+ops are dtype-explicit (bf16 compute, f32 softmax statistics and norms).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.meshutil import maybe_constrain  # noqa: F401  (re-export)
+
+DEFAULT_KV_CHUNK = 1024
+
+
+def rms_norm(x, weight, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _chunk_attn(q, k, v, mask, scale):
+    """One KV chunk: q (B,Sq,Hk,G,hd), k/v (B,C,Hk,hd), mask (Sq,C) or None.
+
+    Returns (scores_max (B,Sq,Hk,G), exp-sum, weighted-V partial) in f32.
+    """
+    s = jnp.einsum("bqkgh,bckh->bqkgc", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    # guard fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m_safe, l, o
+
+
+def flash_attention(q, k, v, *, causal: bool,
+                    window: Optional[int] = None,
+                    q_offset: int = 0,
+                    kv_chunk: int = DEFAULT_KV_CHUNK):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, Hq, hd);  k, v: (B, Skv, Hkv, hd);  GQA via head grouping.
+    q_offset: absolute position of q[0] (decode: Skv-1 typically).
+    Never materializes (Sq, Skv); peak transient is (B, Sq, Hq, kv_chunk).
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        m_run, l_run, o_run = carry
+        idx, k_blk, v_blk = xs
+        kv_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((sq, kv_chunk), bool)
+        mask &= (kv_pos[None, :] < skv)                      # padding
+        if causal:
+            mask &= (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask &= (kv_pos[None, :] > q_pos[:, None] - window)
+        m_new, l_new, o_new = _chunk_attn(qg, k_blk, v_blk, mask, scale)
+        m = jnp.maximum(m_run, m_new)
+        a = jnp.exp(m_run - m)
+        bfac = jnp.exp(m_new - m)
+        l = l_run * a + l_new * bfac
+        o = o_run * a[..., None] + o_new * bfac[..., None]
+        return (m, l, o), None
+
+    m0 = jnp.full((b, sq, hkv, g), -jnp.inf, jnp.float32)
+    # exp(-inf - -inf) guarded by starting m at a large negative finite
+    m0 = jnp.full((b, sq, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    o0 = jnp.zeros((b, sq, hkv, g, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (jnp.arange(n_chunks), jnp.swapaxes(kc, 0, 1), jnp.swapaxes(vc, 0, 1)))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-position attention against a (possibly overlong) cache.
+
+    q: (B, 1, Hq, hd); caches: (B, Smax, Hkv, hd); length: valid prefix.
+    """
+    b, _, hq, hd = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(smax)
+    s = jnp.where(pos[None, None, None, :] < length, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_in) + b_in)
+    return jnp.einsum("bsf,fd->bsd", h, w_out) + b_out

@@ -1,0 +1,419 @@
+"""Model zoo: parameter tables, forward passes, losses for all families.
+
+Params are a flat dict name -> array; per-layer params are stacked on a
+leading n_layers axis and consumed by lax.scan (keeps the HLO O(1) in depth,
+which is what makes the 512-device dry-run compiles tractable).  Every
+parameter's PartitionSpec lives in the same table (sharding/partition.py
+normalizes them to a concrete mesh).
+
+Sharding convention (DESIGN.md section 5):
+  batch                -> ("pod", "data")
+  attn heads / d_ff /
+  d_inner / experts    -> "model"          (TP / EP)
+  vocab                -> "model"          (sharded logits + psum'd CE)
+  decode KV cache seq  -> "model" (batch on "data"); long_500k (batch=1)
+                          shards cache seq on "data" too
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common, moe as moe_lib, ssm as ssm_lib
+from .config import ModelConfig
+
+BATCH = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class Par:
+    shape: tuple
+    spec: tuple
+    init: str = "normal"      # normal | zeros | ones | alog | dtbias
+    dtype: Optional[str] = None
+
+
+# --------------------------------------------------------------------- table
+
+def _attn_pars(cfg: ModelConfig, t: dict, prefix: str = "", kv: bool = True):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    t[prefix + "attn_norm"] = Par((d,), (None,), "ones")
+    t[prefix + "wq"] = Par((d, hq * hd), (None, "model"))
+    t[prefix + "wk"] = Par((d, hkv * hd), (None, "model"))
+    t[prefix + "wv"] = Par((d, hkv * hd), (None, "model"))
+    t[prefix + "wo"] = Par((hq * hd, d), ("model", None))
+    if cfg.qkv_bias:
+        t[prefix + "bq"] = Par((hq * hd,), ("model",), "zeros")
+        t[prefix + "bk"] = Par((hkv * hd,), ("model",), "zeros")
+        t[prefix + "bv"] = Par((hkv * hd,), ("model",), "zeros")
+    if cfg.qk_norm:
+        t[prefix + "q_norm"] = Par((hd,), (None,), "ones")
+        t[prefix + "k_norm"] = Par((hd,), (None,), "ones")
+
+
+def _mlp_pars(cfg: ModelConfig, t: dict, prefix: str = "", gelu: bool = False):
+    d, ff = cfg.d_model, cfg.d_ff
+    t[prefix + "mlp_norm"] = Par((d,), (None,), "ones")
+    if gelu:
+        t[prefix + "w_in"] = Par((d, ff), (None, "model"))
+        t[prefix + "b_in"] = Par((ff,), ("model",), "zeros")
+        t[prefix + "w_out"] = Par((ff, d), ("model", None))
+        t[prefix + "b_out"] = Par((d,), (None,), "zeros")
+    else:
+        t[prefix + "w_gate"] = Par((d, ff), (None, "model"))
+        t[prefix + "w_up"] = Par((d, ff), (None, "model"))
+        t[prefix + "w_down"] = Par((ff, d), ("model", None))
+
+
+def _mamba_pars(cfg: ModelConfig, t: dict, prefix: str = ""):
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    t[prefix + "ssm_norm"] = Par((d,), (None,), "ones")
+    t[prefix + "in_proj"] = Par((d, 2 * di), (None, "model"))
+    t[prefix + "conv_w"] = Par((cfg.ssm_conv, di), (None, "model"))
+    t[prefix + "out_proj"] = Par((di, d), ("model", None))
+    if cfg.ssm_version == 1:
+        t[prefix + "x_proj"] = Par((di, cfg.dt_rank + 2 * ns), ("model", None))
+        t[prefix + "dt_proj"] = Par((cfg.dt_rank, di), (None, "model"))
+        t[prefix + "dt_bias"] = Par((di,), ("model",), "dtbias", "float32")
+        t[prefix + "a_log"] = Par((di, ns), ("model", None), "alog", "float32")
+        t[prefix + "dvec"] = Par((di,), ("model",), "ones")
+    else:
+        nh = cfg.mamba2_heads
+        t[prefix + "b_proj"] = Par((d, ns), (None, None))
+        t[prefix + "c_proj"] = Par((d, ns), (None, None))
+        t[prefix + "dt_proj"] = Par((d, nh), (None, "model"))
+        t[prefix + "dt_bias"] = Par((nh,), ("model",), "dtbias", "float32")
+        t[prefix + "a_log"] = Par((nh,), ("model",), "alog", "float32")
+        t[prefix + "dvec"] = Par((nh,), ("model",), "ones")
+
+
+def _moe_pars(cfg: ModelConfig, t: dict, prefix: str = ""):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t[prefix + "moe_norm"] = Par((d,), (None,), "ones")
+    t[prefix + "router"] = Par((d, e), (None, None), dtype="float32")
+    t[prefix + "w_gate"] = Par((e, d, ff), ("model", None, None))
+    t[prefix + "w_up"] = Par((e, d, ff), ("model", None, None))
+    t[prefix + "w_down"] = Par((e, ff, d), ("model", None, None))
+    if cfg.dense_residual:
+        t[prefix + "dense_w_gate"] = Par((d, ff), (None, "model"))
+        t[prefix + "dense_w_up"] = Par((d, ff), (None, "model"))
+        t[prefix + "dense_w_down"] = Par((ff, d), ("model", None))
+
+
+def param_table(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    t: dict = {
+        "embed": Par((cfg.vocab, d), ("model", None)),
+        "final_norm": Par((d,), (None,), "ones"),
+    }
+    lt: dict = {}
+    if cfg.family in ("dense", "vlm"):
+        _attn_pars(cfg, lt)
+        _mlp_pars(cfg, lt)
+    elif cfg.family == "moe":
+        _attn_pars(cfg, lt)
+        _moe_pars(cfg, lt)
+    elif cfg.family == "ssm":
+        _mamba_pars(cfg, lt)
+    elif cfg.family == "hybrid":
+        _mamba_pars(cfg, lt)
+        _attn_pars(cfg, t, "shared_attn/")      # ONE shared block (zamba2)
+        _mlp_pars(cfg, t, "shared_attn/")
+    elif cfg.family == "encdec":
+        _attn_pars(cfg, lt)                      # decoder self-attn
+        for nm in ("xq", "xk", "xv", "xo"):
+            pass
+        lt["xattn_norm"] = Par((d,), (None,), "ones")
+        lt["xwq"] = Par((d, cfg.n_heads * cfg.hd), (None, "model"))
+        lt["xwk"] = Par((d, cfg.n_kv * cfg.hd), (None, "model"))
+        lt["xwv"] = Par((d, cfg.n_kv * cfg.hd), (None, "model"))
+        lt["xwo"] = Par((cfg.n_heads * cfg.hd, d), ("model", None))
+        _mlp_pars(cfg, lt, gelu=True)
+        et: dict = {}
+        _attn_pars(cfg, et)
+        _mlp_pars(cfg, et, gelu=True)
+        for k, v in et.items():
+            t["enc_layers/" + k] = Par(
+                (cfg.encoder_layers,) + v.shape, (None,) + v.spec, v.init,
+                v.dtype)
+        t["enc_norm"] = Par((d,), (None,), "ones")
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        t["patch_proj"] = Par((d, d), (None, None))
+    for k, v in lt.items():
+        t["layers/" + k] = Par((cfg.n_layers,) + v.shape, (None,) + v.spec,
+                               v.init, v.dtype)
+    return t
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    table = param_table(cfg)
+    out = {}
+    for i, name in enumerate(sorted(table)):
+        par = table[name]
+        dt = jnp.dtype(par.dtype) if par.dtype else cfg.jdtype
+        k = jax.random.fold_in(key, i)
+        if par.init == "zeros":
+            arr = jnp.zeros(par.shape, dt)
+        elif par.init == "ones":
+            arr = jnp.ones(par.shape, dt)
+        elif par.init == "alog":
+            ns = par.shape[-1]
+            base = jnp.log(jnp.arange(1, ns + 1, dtype=jnp.float32))
+            arr = jnp.broadcast_to(base, par.shape).astype(dt) \
+                if ns > 1 else jnp.zeros(par.shape, dt)
+        elif par.init == "dtbias":
+            arr = jnp.full(par.shape, -2.0, dt)
+        else:
+            fan_in = par.shape[-2] if len(par.shape) >= 2 else par.shape[-1]
+            arr = (jax.random.normal(k, par.shape, jnp.float32)
+                   * (fan_in ** -0.5)).astype(dt)
+        out[name] = arr
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    from jax.sharding import PartitionSpec as P
+    return {k: P(*v.spec) for k, v in param_table(cfg).items()}
+
+
+# ------------------------------------------------------------------- forward
+
+def _attention(cfg, p, h, *, causal, cache=None, pos=None, prefix="",
+               window=None, kv_input=None, q_offset: int = 0):
+    """Returns (out, (k_new, v_new)) -- new cache entries when cache given,
+    else the full-sequence K/V (for prefill)."""
+    g = lambda nm: p[prefix + nm]
+    b, s, d = h.shape
+    x = common.rms_norm(h, g("attn_norm"), cfg.norm_eps)
+    src = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,de->bse", x, g("wq"))
+    k = jnp.einsum("bsd,de->bse", src, g("wk"))
+    v = jnp.einsum("bsd,de->bse", src, g("wv"))
+    if cfg.qkv_bias:
+        q, k, v = q + g("bq"), k + g("bk"), v + g("bv")
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, src.shape[1], cfg.n_kv, cfg.hd)
+    v = v.reshape(b, src.shape[1], cfg.n_kv, cfg.hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, g("q_norm"), cfg.norm_eps)
+        k = common.rms_norm(k, g("k_norm"), cfg.norm_eps)
+    if kv_input is None and cfg.family != "encdec":   # self-attn: rope
+        # (whisper uses absolute sinusoidal positions added to h instead)
+        q = common.rope(q, q_offset + jnp.arange(s)[None], cfg.rope_theta)
+        if cache is None:
+            k = common.rope(k, jnp.arange(src.shape[1])[None], cfg.rope_theta)
+        else:
+            k = common.rope(k, (q_offset + jnp.arange(s))[None],
+                            cfg.rope_theta)
+
+    if cache is not None:                      # decode: update + attend
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        out = common.decode_attention(q, k_cache, v_cache, pos + s)
+        new_kv = (k_cache, v_cache)
+    else:
+        out = common.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+        new_kv = (k, v)
+    out = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), g("wo"))
+    return out, new_kv
+
+
+def _mlp(cfg, p, h, prefix="", gelu=False):
+    x = common.rms_norm(h, p[prefix + "mlp_norm"], cfg.norm_eps)
+    if gelu:
+        return common.gelu_mlp(x, p[prefix + "w_in"], p[prefix + "b_in"],
+                               p[prefix + "w_out"], p[prefix + "b_out"])
+    return common.swiglu(x, p[prefix + "w_gate"], p[prefix + "w_up"],
+                         p[prefix + "w_down"])
+
+
+def _layer(cfg: ModelConfig, params_all, p, h, cache, pos, layer_idx,
+           window=None):
+    """One decoder layer of any family.  Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    qo = 0 if pos is None else pos          # decode: rope at the true position
+    if cfg.family in ("dense", "vlm"):
+        a, kv = _attention(cfg, p, h, causal=True, cache=cache, pos=pos,
+                           window=window, q_offset=qo)
+        h = h + a
+        h = h + _mlp(cfg, p, h)
+        return h, kv, aux
+    if cfg.family == "moe":
+        a, kv = _attention(cfg, p, h, causal=True, cache=cache, pos=pos,
+                           window=window, q_offset=qo)
+        h = h + a
+        x = common.rms_norm(h, p["moe_norm"], cfg.norm_eps)
+        mo, aux = moe_lib.moe_forward(
+            {"router": p["router"], "w_gate": p["w_gate"],
+             "w_up": p["w_up"], "w_down": p["w_down"]}, x, cfg)
+        if cfg.dense_residual:
+            mo = mo + common.swiglu(x, p["dense_w_gate"], p["dense_w_up"],
+                                    p["dense_w_down"])
+        return h + mo, kv, aux
+    if cfg.family in ("ssm", "hybrid"):
+        x = common.rms_norm(h, p["ssm_norm"], cfg.norm_eps)
+        fwd = ssm_lib.mamba1_forward if cfg.ssm_version == 1 \
+            else ssm_lib.mamba2_forward
+        out, new_cache = fwd(p, x, cfg, cache)
+        return h + out, new_cache, aux
+    raise ValueError(cfg.family)
+
+
+def _layer_params(params: dict, prefix: str = "layers/") -> dict:
+    return {k[len(prefix):]: v for k, v in params.items()
+            if k.startswith(prefix)}
+
+
+def _embed_tokens(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def logits_from_h(params, h):
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+
+
+def encode_frames(cfg, params, frames):
+    """Whisper encoder over STUB frame embeddings (B, Se, d)."""
+    pos = _sinusoid(cfg, frames.shape[1]).astype(frames.dtype)
+    h = frames + pos[None]
+    lp = _layer_params(params, "enc_layers/")
+
+    def body(h, p):
+        a, _ = _attention(cfg, p, h, causal=False)
+        h = h + a
+        h = h + _mlp(cfg, p, h, gelu=True)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(fn, h, lp)
+    return common.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _sinusoid(cfg, s):
+    d = cfg.d_model
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *,
+            frontier=None, caches=None, pos=None, collect_cache=False):
+    """Full forward.  tokens: (B, S) int32.
+
+    frontier: modality input -- whisper frames (B,Se,d) / vlm patches
+    (B,Np,d) / None.  caches: decode caches pytree or None.
+    pos: decode position (int scalar) or None.
+    Returns (hidden (B,S,d), new_caches or per-layer prefill cache, aux).
+    """
+    h = _embed_tokens(params, tokens).astype(cfg.jdtype)
+    q_offset = 0 if pos is None else pos
+    n_prefix = 0
+    if cfg.family == "vlm" and frontier is not None:
+        patches = jnp.einsum("bpd,de->bpe", frontier.astype(cfg.jdtype),
+                             params["patch_proj"])
+        h = jnp.concatenate([patches, h], axis=1)
+        n_prefix = frontier.shape[1]
+    if cfg.family == "encdec":
+        if pos is None:
+            h = h + _sinusoid(cfg, h.shape[1])[None].astype(h.dtype)
+        else:                         # decode: absolute position of the token
+            table_len = jax.tree_util.tree_leaves(caches)[0].shape[2] \
+                if caches is not None else h.shape[1]
+            table = _sinusoid(cfg, table_len).astype(h.dtype)
+            h = h + jax.lax.dynamic_slice_in_dim(
+                table, pos, h.shape[1], axis=0)[None]
+        enc_out = (encode_frames(cfg, params, frontier)
+                   if frontier is not None else None)
+
+    lp = _layer_params(params)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        # zamba2: groups of `attn_every` mamba2 layers + ONE shared attention
+        # block applied between groups (shared weights across applications)
+        groups = cfg.n_layers // cfg.attn_every
+        lp = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), lp)
+        shared = {k[len("shared_attn/"):]: v for k, v in params.items()
+                  if k.startswith("shared_attn/")}
+        m_caches, a_caches = (None, None) if caches is None else caches
+        new_m, new_a = [], []
+
+        def inner(h, xs):
+            p, c = xs
+            h, nc, _ = _layer(cfg, params, p, h, c, pos, 0)
+            return h, nc
+
+        inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+        for gi in range(groups):
+            gp = jax.tree.map(lambda a: a[gi], lp)
+            gc = None if m_caches is None else jax.tree.map(
+                lambda a: a[gi], m_caches)
+            h, nc = jax.lax.scan(inner_fn, h, (gp, gc))
+            new_m.append(nc)
+            ac = None if a_caches is None else jax.tree.map(
+                lambda a: a[gi], a_caches)
+            a, akv = _attention(cfg, shared, h, causal=True, cache=ac,
+                                pos=pos, window=cfg.window,
+                                q_offset=q_offset)
+            h = h + a
+            h = h + _mlp(cfg, shared, h)
+            new_a.append(akv)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+                      jax.tree.map(lambda *xs: jnp.stack(xs), *new_a))
+        h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, new_caches, aux_total
+
+    def body(carry, xs):
+        h, aux = carry
+        p, c = xs
+        h, nc, a = _layer(cfg, params, p, h, c, pos, 0, window=cfg.window)
+        return (h, aux + a), nc
+
+    if cfg.family == "encdec":
+        # cross-attn K/V from encoder output: computed per layer inside scan
+        # via kv_input = enc_out (weights differ per layer, so pass enc_out)
+        def body(carry, xs):     # noqa: F811  (encdec-specialized)
+            h, aux = carry
+            p, c = xs
+            a, kv = _attention(cfg, p, h, causal=True,
+                               cache=None if c is None else (c[0], c[1]),
+                               pos=pos, q_offset=q_offset)
+            h = h + a
+            if c is None:
+                xa, xkv = _attention(cfg, p, h, causal=False, prefix="x",
+                                     kv_input=enc_out)
+            else:
+                xa = common.decode_attention(
+                    jnp.einsum("bsd,de->bse", common.rms_norm(
+                        h, p["xattn_norm"], cfg.norm_eps), p["xwq"]
+                    ).reshape(h.shape[0], h.shape[1], cfg.n_heads, cfg.hd),
+                    c[2], c[3], c[2].shape[1])
+                xa = jnp.einsum("bse,ed->bsd",
+                                xa.reshape(h.shape[0], h.shape[1], -1),
+                                p["xwo"])
+            h = h + xa
+            h = h + _mlp(cfg, p, h, gelu=True)
+            if c is None:
+                nc = (kv[0], kv[1], xkv[0], xkv[1])   # prefill: self + cross
+            else:
+                nc = (kv[0], kv[1], c[2], c[3])
+            return (h, aux), nc
+
+    fn = jax.checkpoint(body) if (cfg.remat and caches is None) else body
+    (h, aux_total), new_caches = jax.lax.scan(
+        fn, (h, aux_total), (lp, caches))
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    return h, new_caches, aux_total

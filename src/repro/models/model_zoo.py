@@ -1,0 +1,207 @@
+"""Public model API: build(cfg) -> steps + input specs + cache init.
+
+Everything here is shape-polymorphic over (batch, seq) and mesh-agnostic;
+launch/dryrun.py and train/trainer.py add pjit shardings on top.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import ssm as ssm_lib
+from .config import ModelConfig, ShapeConfig
+from ..optim import optimizers
+
+LOSS_CHUNK = 0            # 0 = full logits; >0 = seq-chunked CE (section Perf)
+BATCH_AXES = ("pod", "data")
+
+
+from .common import maybe_constrain as _maybe_constrain  # noqa: E402
+
+
+def cross_entropy(params, h, labels, mask, *, chunk: int = 0):
+    """Next-token CE from hidden states, optionally chunked over seq.
+
+    Chunking never materializes the full (B, S, V) logits -- the memory-term
+    optimization recorded in EXPERIMENTS.md section Perf.
+    """
+    if chunk and h.shape[1] > chunk and h.shape[1] % chunk == 0:
+        b, s, d = h.shape
+        n = s // chunk
+        hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+        mc = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+
+        def body(carry, xs):
+            hh, ll, mm = xs
+            num, den = _ce_chunk(params, hh, ll, mm)
+            return (carry[0] + num, carry[1] + den), None
+
+        (num, den), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, lc, mc))
+        return num / jnp.maximum(den, 1.0)
+    num, den = _ce_chunk(params, h, labels, mask)
+    return num / jnp.maximum(den, 1.0)
+
+
+def _ce_chunk(params, h, labels, mask):
+    logits = M.logits_from_h(params, h).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def _frontier_shape(cfg: ModelConfig, batch: int):
+    if cfg.family == "encdec":
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        return (batch, cfg.n_patches, cfg.d_model)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((b, s), jnp.int32)
+        out["labels"] = sds((b, s), jnp.int32)
+        out["mask"] = sds((b, s), jnp.float32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((b, s), jnp.int32)
+    else:                                        # decode: one new token
+        out["tokens"] = sds((b, 1), jnp.int32)
+    fs = _frontier_shape(cfg, b)
+    if fs is not None and shape.kind != "decode":
+        out["frontier"] = sds(fs, cfg.jdtype)
+    return out
+
+
+# ---------------------------------------------------------------- cache init
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    """Decode caches (zeros or ShapeDtypeStructs)."""
+    mk = (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)) if abstract \
+        else (lambda shape, dt: jnp.zeros(shape, dt))
+    L, hkv, hd, dt = cfg.n_layers, cfg.n_kv, cfg.hd, cfg.jdtype
+    if cfg.family in ("dense", "vlm", "moe"):
+        return (mk((L, batch, max_seq, hkv, hd), dt),
+                mk((L, batch, max_seq, hkv, hd), dt))
+    if cfg.family == "ssm":
+        conv = mk((L, batch, cfg.ssm_conv - 1, cfg.d_inner), dt)
+        h = mk((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        return (conv, h)
+    if cfg.family == "hybrid":
+        g, a = cfg.n_layers // cfg.attn_every, cfg.attn_every
+        conv = mk((g, a, batch, cfg.ssm_conv - 1, cfg.d_inner), dt)
+        nh = cfg.mamba2_heads
+        h = mk((g, a, batch, nh, cfg.d_inner // nh, cfg.ssm_state),
+               jnp.float32)
+        kv = (mk((g, batch, max_seq, hkv, hd), dt),
+              mk((g, batch, max_seq, hkv, hd), dt))
+        return ((conv, h), kv)
+    if cfg.family == "encdec":
+        return (mk((L, batch, max_seq, hkv, hd), dt),
+                mk((L, batch, max_seq, hkv, hd), dt),
+                mk((L, batch, cfg.encoder_seq, hkv, hd), dt),
+                mk((L, batch, cfg.encoder_seq, hkv, hd), dt))
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------- steps
+
+@dataclasses.dataclass(frozen=True)
+class BuiltModel:
+    cfg: ModelConfig
+    init_params: Any
+    train_step: Any
+    prefill_step: Any
+    decode_step: Any
+    loss_fn: Any
+
+
+def build(cfg: ModelConfig, opt_cfg: Optional[optimizers.OptConfig] = None,
+          microbatch: int = 0, loss_chunk: int = LOSS_CHUNK,
+          secure_agg_cfg=None) -> BuiltModel:
+    opt = optimizers.make(cfg.optimizer, opt_cfg)
+
+    def loss_fn(params, batch):
+        h, _, aux = M.forward(cfg, params, batch["tokens"],
+                              frontier=batch.get("frontier"))
+        loss = cross_entropy(params, h, batch["labels"], batch["mask"],
+                             chunk=loss_chunk)
+        return loss + 0.01 * aux, loss
+
+    def grad_fn(params, batch):
+        (tot, loss), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, loss
+
+    def train_step(params, opt_state, batch, step):
+        if microbatch and batch["tokens"].shape[0] > microbatch:
+            b = batch["tokens"].shape[0]
+            n = b // microbatch
+            # re-shard each microbatch across the data axes: without the
+            # constraint GSPMD half-shards the (n, mb) reshape and every
+            # microbatch step sees the full per-device batch (EXPERIMENTS.md
+            # section Perf, memory term)
+            mb = jax.tree.map(
+                lambda x: _maybe_constrain(
+                    x.reshape((n, microbatch) + x.shape[1:]),
+                    None, BATCH_AXES), batch)
+
+            def body(carry, xs):
+                g_acc, l_acc = carry
+                g, l = grad_fn(params, xs)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+        else:
+            grads, loss = grad_fn(params, batch)
+        if secure_agg_cfg is not None:
+            # beyond-paper hook: COPML-coded secure gradient aggregation
+            # across the data axis (core/secure_agg.py); wired by the
+            # trainer under shard_map.  Single-process path is identity.
+            pass
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params,
+                                                step)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    def prefill_step(params, batch):
+        """Forward pass producing logits + decode caches."""
+        tokens = batch["tokens"]
+        h, caches, _ = M.forward(cfg, params, tokens,
+                                 frontier=batch.get("frontier"))
+        logits = M.logits_from_h(params, h[:, -1:])
+        return logits, caches
+
+    def decode_step(params, caches, tokens, pos):
+        """One new token against the caches at position pos."""
+        h, new_caches, _ = M.forward(cfg, params, tokens, caches=caches,
+                                     pos=pos)
+        logits = M.logits_from_h(params, h)
+        return logits, new_caches
+
+    return BuiltModel(
+        cfg=cfg,
+        init_params=functools.partial(M.init_params, cfg),
+        train_step=train_step,
+        prefill_step=prefill_step,
+        decode_step=decode_step,
+        loss_fn=loss_fn,
+    )

@@ -1,0 +1,78 @@
+"""Mixture-of-experts layer: top-k routing with sort-based capacity dispatch.
+
+The (E, C, d) expert buffer is sharded on the 'model' axis (expert
+parallelism); tokens are sharded on 'data', so the scatter into the buffer
+and the gather back lower to all-to-all-style collectives under GSPMD --
+exactly the EP communication pattern the roofline's collective term prices.
+
+Memory is O(E*C*d + T*k*d); no (T, E, C) one-hot tensor is ever built
+(that would be ~10^13 elements at the assigned shapes).  Overflowing tokens
+beyond capacity are dropped (standard "dropping" MoE); an aux load-balance
+loss keeps the router near-uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+
+
+def moe_forward(p, x, cfg):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    p keys: router (d, E), w_gate/w_up (E, d, ff), w_down (E, ff, d).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(gate_i[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    # --- cumsum-based capacity dispatch (NO global sort: a sharded argsort
+    #     under GSPMD all-gathers the whole token stream; the prefix-sum
+    #     formulation shards cleanly along T) ---
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+    # tiny token counts (decode steps): don't drop below a few slots per
+    # expert or single-token batches lose routed experts entirely
+    cap = max(cap, min(t * k, 4))
+    oh = jax.nn.one_hot(gate_i, e, dtype=jnp.int32)           # (T, k, E)
+    oh_tok = jnp.sum(oh, axis=1)                              # (T, E)
+    csum = jnp.cumsum(oh_tok, axis=0) - oh_tok                # exclusive (T,E)
+    intra = jnp.cumsum(oh, axis=1) - oh                       # within-token
+    pos = jnp.take_along_axis(csum[:, None, :] + intra,
+                              gate_i[..., None], axis=2)[..., 0]   # (T, k)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+
+    # Expert-buffer sharding is left to GSPMD: both measured alternatives
+    # lose (EXPERIMENTS.md section Perf, MoE cell) -- explicit "model"
+    # constraints trade -17% collective for +66% peak HBM (over budget);
+    # sharding capacity over "data" removes the 16x duplicated expert
+    # compute but makes the scatter collective-pathological (~16x more wire
+    # bytes).  The real fix is a shard_map ragged all-to-all dispatch
+    # (documented next step).
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    upd = jnp.where(keep[..., None], xf[:, None, :], 0).astype(x.dtype)
+    buf = buf.at[gate_i, pos_c].add(upd)                      # (E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+
+    gathered = y[gate_i, pos_c]                               # (T, k, d)
+    out = jnp.sum(gathered *
+                  jnp.where(keep, gate_w, 0.0)[..., None].astype(x.dtype),
+                  axis=1)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,225 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Training/prefill uses an outer lax.scan over time-chunks with a rematerialized
+chunk body (only chunk-boundary states are stored for backward) and an inner
+lax.scan over steps -- no (S, d_inner, state) tensor is ever materialized.
+Decode carries (conv_state, ssm_state) and is O(1) in context length: this is
+why the ssm/hybrid archs run the long_500k shape (DESIGN.md section 6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+TIME_CHUNK = 128
+
+
+def _causal_conv(x, w, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  x: (B, S, C); w: (K, C).
+
+    cache: (B, K-1, C) previous inputs for decode continuity.
+    Returns (y (B, S, C), new_cache (B, K-1, C)).
+    """
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else cache
+    return y, new_cache
+
+
+def _ssm_scan(decay, inp, h0, chunk: int):
+    """h_t = decay_t * h_{t-1} + inp_t, scanned over axis 1 (time).
+
+    decay, inp: (B, S, ...state dims);  h0: (B, ...).  Returns (ys, h_S).
+    Outer scan over S/chunk with checkpointed body, inner scan over steps.
+    """
+    b, s = inp.shape[:2]
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        decay = jnp.pad(decay, ((0, 0), (0, pad)) + ((0, 0),) * (decay.ndim - 2),
+                        constant_values=1.0)
+        inp = jnp.pad(inp, ((0, 0), (0, pad)) + ((0, 0),) * (inp.ndim - 2))
+    dc = jnp.moveaxis(decay.reshape((b, n, chunk) + decay.shape[2:]), 1, 0)
+    ic = jnp.moveaxis(inp.reshape((b, n, chunk) + inp.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(h, xs):
+        d_blk, i_blk = xs              # (B, chunk, ...)
+
+        def step(hh, t):
+            d_t, i_t = t
+            hh = d_t * hh + i_t
+            return hh, hh
+
+        h, ys = jax.lax.scan(
+            step, h, (jnp.moveaxis(d_blk, 1, 0), jnp.moveaxis(i_blk, 1, 0)))
+        return h, jnp.moveaxis(ys, 0, 1)   # (B, chunk, ...)
+
+    h, ys = jax.lax.scan(chunk_body, h0, (dc, ic))
+    ys = jnp.moveaxis(ys, 0, 1).reshape((b, n * chunk) + inp.shape[2:])
+    return ys[:, :s], h
+
+
+def mamba1_forward(p, x, cfg, cache=None):
+    """Mamba1 block.  x: (B, S, d_model).  cache: None or (conv, h).
+
+    p keys: in_proj (d, 2di), conv_w (K, di), x_proj (di, dt_rank+2N),
+    dt_proj (dt_rank, di), dt_bias (di,), a_log (di, N), dvec (di,),
+    out_proj (di, d).
+    """
+    di, ns = cfg.d_inner, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = cache[0] if cache is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_cache)
+    xin = jax.nn.silu(xin)
+
+    proj = jnp.einsum("bse,ef->bsf", xin, p["x_proj"])
+    dt_low, bmat, cmat = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + ns], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_low, p["dt_proj"]) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (di, N)
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)   # (B,S,di,N)
+    inp = (dt * xin).astype(jnp.float32)[..., None] * \
+        bmat.astype(jnp.float32)[..., None, :]               # (B,S,di,N)
+
+    h0 = cache[1] if cache is not None else \
+        jnp.zeros((x.shape[0], di, ns), jnp.float32)
+    hs, h_last = _ssm_scan(decay, inp, h0, TIME_CHUNK)
+    y = jnp.einsum("bsen,bsn->bse", hs, cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + xin * p["dvec"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (new_conv, h_last)
+
+
+def _mamba2_proj(p, x, cfg, cache):
+    """Shared projections for both mamba2 execution paths."""
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.mamba2_heads
+    hd = di // nh
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = cache[0] if cache is not None else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_cache)
+    xin = jax.nn.silu(xin)
+    xh = xin.reshape(xin.shape[0], xin.shape[1], nh, hd)      # (B,S,nh,hd)
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["b_proj"]).astype(jnp.float32)
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["c_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (nh,)
+    return xh, z, bmat, cmat, dt, a, new_conv
+
+
+def _mamba2_finish(p, x, xh, z, y, cfg):
+    y = y.astype(x.dtype) + xh * p["dvec"][None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], -1) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba2_forward_scan(p, x, cfg, cache=None):
+    """Mamba2 reference path: explicit state recurrence (decode + oracle).
+
+    Materializes (B,S,nh,hd,ns) decay/input tensors -- fine for S=1 decode,
+    prohibitive HBM traffic for training (see mamba2_forward)."""
+    ns, nh = cfg.ssm_state, cfg.mamba2_heads
+    hd = cfg.d_inner // nh
+    xh, z, bmat, cmat, dt, a, new_conv = _mamba2_proj(p, x, cfg, cache)
+    decay = jnp.exp(dt * a)                                   # (B,S,nh)
+    decay = jnp.broadcast_to(decay[..., None, None],
+                             decay.shape + (hd, ns))
+    inp = (dt[..., None] * xh.astype(jnp.float32))[..., None] * \
+        bmat[..., None, None, :]                              # (B,S,nh,hd,N)
+    h0 = cache[1] if cache is not None else \
+        jnp.zeros((x.shape[0], nh, hd, ns), jnp.float32)
+    hs, h_last = _ssm_scan(decay, inp, h0, TIME_CHUNK)
+    y = jnp.einsum("bshpn,bsn->bshp", hs, cmat)
+    out = _mamba2_finish(p, x, xh, z, y, cfg)
+    return out, (new_conv, h_last)
+
+
+def mamba2_forward(p, x, cfg, cache=None, chunk: int = 128):
+    """Mamba2 block via the SSD chunked-matmul algorithm (training path).
+
+    The naive recurrence materializes (B,S,nh,hd,ns) decay/input tensors --
+    at zamba2's train_4k shard that is ~0.7 GB *per layer per pass*, and it
+    runs on the VPU.  SSD turns the same recurrence into chunk-local
+    (c x c) score matmuls (MXU) + an S/c-step state scan, shrinking HBM
+    traffic ~a/x40 and moving the flops to the MXU (EXPERIMENTS.md
+    section Perf, zamba2 cell).  Exact: equals mamba2_forward_scan to f32
+    tolerance (tests/test_models.py::test_mamba2_ssd_matches_scan).
+    """
+    if x.shape[1] == 1:                       # decode: one recurrence step
+        return mamba2_forward_scan(p, x, cfg, cache)
+    ns, nh = cfg.ssm_state, cfg.mamba2_heads
+    hd = cfg.d_inner // nh
+    xh, z, bmat, cmat, dt, a, new_conv = _mamba2_proj(p, x, cfg, cache)
+    b, s = x.shape[0], x.shape[1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (t.ndim - 2))
+        xhp, bp, cp, dtp = map(padf, (xh.astype(jnp.float32), bmat, cmat,
+                                      dt))
+    else:
+        xhp, bp, cp, dtp = xh.astype(jnp.float32), bmat, cmat, dt
+    nc = (s + pad) // c
+    shp = lambda t: t.reshape((b, nc, c) + t.shape[2:])
+    xc, bc, cc, dtc = map(shp, (xhp, bp, cp, dtp))
+    loga = dtc * a                                            # (B,nc,c,nh)
+    la = jnp.cumsum(loga, axis=2)                             # inclusive
+    bx = dtc[..., None] * xc                                  # (B,nc,c,nh,hd)
+
+    # intra-chunk: y[i] += sum_{j<=i} exp(la_i - la_j) (C_i.B_j) bx_j
+    cb = jnp.einsum("bkin,bkjn->bkij", cc, bc)                # (B,nc,c,c)
+    diff = la[:, :, :, None, :] - la[:, :, None, :, :]        # (B,nc,i,j,nh)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    scores = jnp.where(causal[None, None, :, :, None],
+                       jnp.exp(diff), 0.0) * cb[..., None]    # (B,nc,i,j,nh)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", scores, bx)
+
+    # per-chunk state contribution + inter-chunk recurrence
+    dec_end = jnp.exp(la[:, :, -1:, :] - la)                  # (B,nc,c,nh)
+    s_k = jnp.einsum("bkjh,bkjhp,bkjn->bkhpn", dec_end, bx, bc)
+    a_k = jnp.exp(la[:, :, -1, :])                            # (B,nc,nh)
+    h0 = cache[1] if cache is not None else \
+        jnp.zeros((b, nh, hd, ns), jnp.float32)
+
+    def step(h, inputs):
+        ak, sk = inputs                                       # (B,nh), (B,nh,hd,ns)
+        h_new = ak[..., None, None] * h + sk
+        return h_new, h                                       # emit h_prev
+
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a_k, 1, 0), jnp.moveaxis(s_k, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,nh,hd,ns)
+    y_inter = jnp.einsum("bkih,bkin,bkhpn->bkihp",
+                         jnp.exp(la), cc, h_prevs)
+    y = (y_intra + y_inter).reshape(b, nc * c, nh, hd)[:, :s]
+    out = _mamba2_finish(p, x, xh, z, y, cfg)
+    return out, (new_conv, h_last)
+
+
+def ssm_decode_cache(cfg, batch: int, dtype):
+    """Zero cache for one layer: (conv_state, ssm_state)."""
+    di = cfg.d_inner
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)
+    if cfg.ssm_version == 1:
+        h = jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)
+    else:
+        nh = cfg.mamba2_heads
+        h = jnp.zeros((batch, nh, di // nh, cfg.ssm_state), jnp.float32)
+    return conv, h

@@ -1,0 +1,158 @@
+"""Optimizers (pure JAX): AdamW, SGD-momentum, and factored Adafactor.
+
+Adafactor matters at assigned-architecture scale: arctic-480b's unfactored
+AdamW f32 states (~5.8 TB) cannot fit a v5e-256 pod; the factored second
+moment (row+col statistics) reduces optimizer memory to ~O(params/d).
+
+Each optimizer is (init(params) -> state, update(grads, state, params, step)
+-> (new_params, new_state)).  Gradient clipping and int8 DP-axis gradient
+compression hooks live here too (distributed-optimization tricks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw(cfg: OptConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * gf
+            v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+            step_ = cfg.lr * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if p.ndim >= 2:
+                step_ = step_ + cfg.lr * cfg.weight_decay * \
+                    p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, gnorm
+
+    return Optimizer(init, update)
+
+
+def sgdm(cfg: OptConfig) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+        def upd(g, m, p):
+            m = cfg.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}, gnorm
+
+    return Optimizer(init, update)
+
+
+def adafactor(cfg: OptConfig) -> Optimizer:
+    """Factored second moment; no first moment, no f32 master copy."""
+
+    def init(params):
+        def make(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(make, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -0.8
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + 1e-30
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                1e-30)[..., None]) + cfg.eps
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v) + cfg.eps
+                ns = {"v": v}
+            step_ = cfg.lr * gf / denom
+            if p.ndim >= 2:
+                step_ = step_ + cfg.lr * cfg.weight_decay * \
+                    p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), ns
+
+        # state leaves are dicts, so map over the params structure manually
+        flat_p, td = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_s = td.flatten_up_to(state["f"])
+        res = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = td.unflatten([r[0] for r in res])
+        new_f = td.unflatten([r[1] for r in res])
+        return new_params, {"f": new_f}, gnorm
+
+    return Optimizer(init, update)
+
+
+def make(name: str, cfg: OptConfig | None = None) -> Optimizer:
+    cfg = cfg or OptConfig(name=name)
+    return {"adamw": adamw, "sgdm": sgdm, "adafactor": adafactor}[name](cfg)

@@ -1,0 +1,81 @@
+"""Batched decode serving driver: prefill once, decode autoregressively.
+
+Greedy decoding with a fixed-size cache (the decode_32k / long_500k shapes);
+the decode step is the same jitted function the dry-run lowers, so measured
+serving behaviour and the roofline analysis describe the same program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model_zoo as MZ
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 16
+    cache_len: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+def _copy_prefill_into_cache(cfg, prefill_caches, caches, prompt_len):
+    """Write the prefill-produced K/V (seq = prompt_len) into the serving
+    cache (seq = cache_len) at offset 0."""
+    def place(full, pref):
+        if full.shape == pref.shape:
+            return pref
+        # same rank; the (only) differing dim is the sequence dim
+        for ax, (a, b) in enumerate(zip(full.shape, pref.shape)):
+            if a != b:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, pref.astype(full.dtype), 0, axis=ax)
+        return pref
+    return jax.tree.map(place, caches, prefill_caches)
+
+
+def generate(cfg: ModelConfig, params, prompts, scfg: ServeConfig,
+             frontier=None):
+    """prompts: (B, S0) int32.  Returns (tokens (B, S0+new), stats)."""
+    bm = MZ.build(cfg)
+    b, s0 = prompts.shape
+    batch = {"tokens": prompts}
+    if frontier is not None:
+        batch["frontier"] = frontier
+    t0 = time.time()
+    logits, pcaches = jax.jit(bm.prefill_step)(params, batch)
+    caches = MZ.init_cache(cfg, b, scfg.cache_len)
+    caches = _copy_prefill_into_cache(cfg, pcaches, caches, s0)
+    prefill_s = time.time() - t0
+
+    decode = jax.jit(bm.decode_step)
+    key = jax.random.PRNGKey(scfg.seed)
+    tokens = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+    t0 = time.time()
+    # vlm: the cache already contains n_patches prefix positions
+    pos0 = s0 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    for i in range(scfg.max_new_tokens - 1):
+        logits, caches = decode(params, caches, tokens[-1][:, None],
+                                jnp.asarray(pos0 + i, jnp.int32))
+        lg = logits[:, -1]
+        if scfg.greedy:
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / scfg.temperature)
+        tokens.append(nxt.astype(jnp.int32))
+    new = jnp.stack(tokens, axis=1)
+    decode_s = time.time() - t0
+    stats = {"prefill_s": prefill_s, "decode_s": decode_s,
+             "tokens_per_s": b * (scfg.max_new_tokens - 1) /
+             max(decode_s, 1e-9)}
+    return jnp.concatenate([prompts, new], axis=1), stats

@@ -1,0 +1,186 @@
+"""Partition rules: map model/optimizer/input pytrees onto the mesh.
+
+Axes: ("pod",) "data", "model".  Rules (DESIGN.md section 5):
+  * params: from the model's own param table (models/model.py)
+  * optimizer state: derived per-leaf from the param spec (adafactor's
+    factored stats drop the corresponding dim)
+  * batch: ("pod","data") on the batch dim
+  * decode KV caches: batch on "data", cache sequence on "model"
+    (GQA kv-head counts need not divide the model axis; sequence always
+    does).  long_500k (batch=1): sequence on "data" AND heads on "model".
+Axes absent from the mesh (or not dividing the dim) are dropped.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models import model_zoo as MZ
+from ..models.config import ModelConfig, ShapeConfig
+
+
+def _fit(spec_entry, dim, mesh: Mesh):
+    """Keep a spec axis only if present in the mesh and dividing the dim."""
+    if spec_entry is None:
+        return None
+    entries = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    kept = tuple(a for a in entries if a in mesh.shape)
+    size = int(np.prod([mesh.shape[a] for a in kept])) if kept else 1
+    if not kept or dim % size != 0:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def normalize(spec: P, shape, mesh: Mesh) -> P:
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    return P(*(_fit(e, d, mesh) for e, d in zip(entries, shape)))
+
+
+def shard(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    return NamedSharding(mesh, normalize(spec, shape, mesh))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> dict:
+    table = M.param_table(cfg)
+    return {k: shard(mesh, P(*v.spec), v.shape) for k, v in table.items()}
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh,
+                  fsdp: bool | None = None) -> dict:
+    """Abstract params with shardings attached (dry-run inputs).
+
+    fsdp=True additionally shards every >=2D parameter's largest free dim
+    over the 'data' axis (ZeRO-3/FSDP via GSPMD: weights are all-gathered
+    per layer inside the step).  Default: on when the model-parallel shard
+    alone exceeds ~4 GiB/device (arctic-480b), and for decode/prefill cells
+    where the data axis carries no gradient state (launch/dryrun.py)."""
+    table = M.param_table(cfg)
+    if fsdp is None:
+        model_shards = mesh.shape.get("model", 1)
+        bytes_per_dev = cfg.param_count() * 2 / model_shards
+        fsdp = bytes_per_dev > 4 * 2 ** 30
+    out = {}
+    for k, v in table.items():
+        dt = jnp.dtype(v.dtype) if v.dtype else cfg.jdtype
+        sp = tuple(v.spec)
+        if fsdp and len(v.shape) >= 2:
+            sp = zero_spec(sp, v.shape, mesh)
+        out[k] = jax.ShapeDtypeStruct(
+            v.shape, dt, sharding=shard(mesh, P(*sp), v.shape))
+    return out
+
+
+def zero_spec(spec: tuple, shape: tuple, mesh: Mesh) -> tuple:
+    """ZeRO-style optimizer-state sharding: additionally shard the largest
+    dim not already sharded over the 'data' axis.  Distributed-optimization
+    trick from DESIGN.md section 5: unfactored f32 moments of a 30B+ MoE do
+    not fit HBM when sharded on 'model' only."""
+    if "data" not in mesh.shape:
+        return spec
+    sp = list(tuple(spec) + (None,) * (len(shape) - len(tuple(spec))))
+    data = mesh.shape["data"]
+    best, best_dim = None, 0
+    for i, (e, d) in enumerate(zip(sp, shape)):
+        if e is None and d % data == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is not None:
+        sp[best] = "data"
+    return tuple(sp)
+
+
+def opt_state_structs(cfg: ModelConfig, mesh: Mesh, params: dict) -> Any:
+    """Abstract optimizer state with derived (ZeRO-sharded) shardings."""
+    table = M.param_table(cfg)
+
+    def f32(shape, sp):
+        sp = zero_spec(sp, shape, mesh)
+        return jax.ShapeDtypeStruct(
+            shape, jnp.float32, sharding=shard(mesh, P(*sp), shape))
+
+    if cfg.optimizer in ("adamw", "sgdm"):
+        moments = {k: f32(table[k].shape, table[k].spec) for k in table}
+        if cfg.optimizer == "adamw":
+            return {"m": moments,
+                    "v": {k: f32(table[k].shape, table[k].spec)
+                          for k in table}}
+        return {"m": moments}
+    # adafactor
+    fstate = {}
+    for k, v in table.items():
+        if len(v.shape) >= 2:
+            fstate[k] = {
+                "vr": f32(v.shape[:-1], tuple(v.spec)[:-1]),
+                "vc": f32(v.shape[:-2] + v.shape[-1:],
+                          tuple(v.spec)[:-2] + tuple(v.spec)[-1:]),
+            }
+        else:
+            fstate[k] = {"v": f32(v.shape, v.spec)}
+    return {"f": fstate}
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    specs = MZ.input_specs(cfg, shape)
+    batch_axes = ("pod", "data")
+    out = {}
+    for k, sds in specs.items():
+        sp = (batch_axes,) + (None,) * (len(sds.shape) - 1)
+        out[k] = jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=shard(mesh, P(*sp), sds.shape))
+    return out
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Abstract decode caches with shardings (see module docstring)."""
+    b, s = shape.global_batch, shape.seq_len
+    long = b < mesh.shape.get("data", 1)      # can't shard batch: long_500k
+    caches = MZ.init_cache(cfg, b, s, abstract=True)
+
+    def kv_spec(ndim, seq_axis, batch_axis, head_axis):
+        sp = [None] * ndim
+        if long:
+            sp[seq_axis] = "data"
+            sp[head_axis] = "model"
+        else:
+            sp[batch_axis] = "data"
+            sp[seq_axis] = "model"
+        return sp
+
+    def annotate(path, sds):
+        nd = len(sds.shape)
+        sp = [None] * nd
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            # (L, B, S, Hkv, hd); encdec cross caches have S = encoder_seq
+            sp = kv_spec(nd, 2, 1, 3)
+        elif cfg.family == "ssm":
+            # conv (L,B,K-1,di) / h (L,B,di,ns): shard di on model
+            sp = [None] * nd
+            sp[1] = None if long else "data"
+            di_axis = 3 if nd == 4 and sds.shape[3] == cfg.d_inner else 2
+            if sds.shape[di_axis] == cfg.d_inner:
+                sp[di_axis] = "model"
+        elif cfg.family == "hybrid":
+            if nd == 5 and sds.shape[2] == s:     # attn kv (g,B,S,H,hd)
+                sp = kv_spec(nd, 2, 1, 3)
+            else:
+                # mamba conv (g,a,B,K-1,di) / h (g,a,B,nh,hd,ns)
+                sp = [None] * nd
+                sp[2] = None if long else "data"
+                for ax, dim in enumerate(sds.shape):
+                    if ax >= 3 and dim in (cfg.d_inner, cfg.mamba2_heads):
+                        sp[ax] = "model"
+                        break
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=shard(mesh, P(*sp), sds.shape))
+
+    return jax.tree.map(lambda x: annotate(None, x), caches)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

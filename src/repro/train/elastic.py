@@ -1,0 +1,53 @@
+"""Elastic scaling + straggler mitigation utilities.
+
+Two mechanisms (DESIGN.md section 5):
+
+1. Re-mesh on restart: a checkpoint saved on one mesh restores onto any
+   other (checkpoint.py stores full logical arrays; device_put against the
+   new mesh's shardings re-shards).  `replan_mesh` picks the closest valid
+   (data, model) factorization for the surviving device count.
+
+2. Coded straggler tolerance -- the paper's own recovery threshold, promoted
+   to a framework feature: a COPML gradient round decodes from ANY
+   R = (2r+1)(K+T-1)+1 of N coded contributions, and Shamir-shared secure
+   aggregation needs only T+1 of N shares.  `straggler_budget` reports how
+   many hosts a given config can lose per step at zero recovery cost
+   (vs. checkpoint-restart which costs minutes)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from ..core import lagrange
+
+
+def replan_mesh(n_devices: int, prefer_model: int = 16):
+    """Largest (data, model) mesh with model | prefer_model that fits."""
+    model = prefer_model
+    while model > 1 and (n_devices % model or model > n_devices):
+        model //= 2
+    data = n_devices // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerBudget:
+    n: int
+    recovery_threshold: int
+
+    @property
+    def tolerable(self) -> int:
+        return self.n - self.recovery_threshold
+
+
+def straggler_budget(n: int, k: int, t: int, r: int = 1) -> StragglerBudget:
+    return StragglerBudget(n, lagrange.recovery_threshold(r, k, t))
+
+
+def secure_agg_budget(n: int, t: int) -> StragglerBudget:
+    """Shamir aggregation: any T+1 of N shares reconstruct."""
+    return StragglerBudget(n, t + 1)

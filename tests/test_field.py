@@ -1,0 +1,75 @@
+"""Property tests for F_p arithmetic (the substrate of every MPC op)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+
+elem = st.integers(min_value=0, max_value=F.P - 1)
+
+
+@given(elem, elem)
+@settings(max_examples=200, deadline=None)
+def test_mul_matches_int(a, b):
+    got = int(F.mul(jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32)))
+    assert got == (a * b) % F.P
+
+
+@given(elem, elem, elem)
+@settings(max_examples=50, deadline=None)
+def test_ring_axioms(a, b, c):
+    ja, jb, jc = (jnp.asarray(x, jnp.int32) for x in (a, b, c))
+    assert int(F.add(ja, jb)) == (a + b) % F.P
+    assert int(F.sub(ja, jb)) == (a - b) % F.P
+    # distributivity
+    lhs = int(F.mul(ja, F.add(jb, jc)))
+    rhs = int(F.add(F.mul(ja, jb), F.mul(ja, jc)))
+    assert lhs == rhs
+
+
+@given(st.integers(min_value=1, max_value=F.P - 1))
+@settings(max_examples=50, deadline=None)
+def test_inverse(a):
+    inv = int(F.inv(jnp.asarray(a, jnp.int32)))
+    assert (a * inv) % F.P == 1
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_fold26(t):
+    assert int(F.fold26(jnp.asarray(t, jnp.int32))) == t % F.P
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 7, 5), (16, 100, 8), (3, 1500, 2),
+                                   (130, 1025, 7)])
+def test_matmul_vs_uint64_oracle(rng, m, k, n):
+    a = rng.integers(0, F.P, size=(m, k)).astype(np.int32)
+    b = rng.integers(0, F.P, size=(k, n)).astype(np.int32)
+    got = np.asarray(F.matmul(jnp.asarray(a), jnp.asarray(b)))
+    exp = F.np_matmul(a, b)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_matmul_extreme_values():
+    """All-(p-1) operands: worst case for limb recombination overflow."""
+    a = np.full((8, F.MATMUL_CHUNK + 3), F.P - 1, np.int32)
+    b = np.full((F.MATMUL_CHUNK + 3, 8), F.P - 1, np.int32)
+    got = np.asarray(F.matmul(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, F.np_matmul(a, b))
+
+
+def test_poly_eval(rng):
+    x = rng.integers(0, F.P, size=64).astype(np.int32)
+    coeffs = rng.integers(0, F.P, size=4).astype(np.int32)
+    got = np.asarray(F.evaluate_poly_dyn(jnp.asarray(coeffs), jnp.asarray(x)))
+    exp = [(int(coeffs[0]) + int(coeffs[1]) * v + int(coeffs[2]) * v**2
+            + int(coeffs[3]) * v**3) % F.P for v in x.astype(object)]
+    np.testing.assert_array_equal(got, np.asarray(exp, np.int64))
+
+
+def test_host_lagrange_identity():
+    pts = [3, 11, 42, 7]
+    mat = F.host_lagrange_coeffs(pts, pts)
+    np.testing.assert_array_equal(mat, np.eye(4, dtype=np.int32))

@@ -1,0 +1,90 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp ref vs uint64."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.kernels import coded_gradient as cgk
+from repro.kernels import field_poly as fpk
+from repro.kernels import modmatmul as mmk
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (128, 512, 128), (128, 1024, 128), (64, 2048, 32),
+    (256, 300, 48),   # padding path
+])
+def test_modmatmul_shapes(rng, m, k, n):
+    a = jnp.asarray(rng.integers(0, F.P, size=(m, k)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, F.P, size=(k, n)).astype(np.int32))
+    got = ops.modmatmul_exact(a, b, force_pallas=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), F.np_matmul(np.asarray(a), np.asarray(b)))
+    np.testing.assert_array_equal(
+        np.asarray(ref.modmatmul(a, b)),
+        F.np_matmul(np.asarray(a), np.asarray(b)))
+
+
+@given(st.integers(1, 40), st.integers(1, 50), st.integers(1, 30),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_modmatmul_hypothesis(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.integers(0, F.P, size=(m, k)).astype(np.int32))
+    b = jnp.asarray(r.integers(0, F.P, size=(k, n)).astype(np.int32))
+    got = ops.modmatmul_exact(a, b, force_pallas=True, bm=16, bn=16,
+                              bk=32)
+    np.testing.assert_array_equal(
+        np.asarray(got), F.np_matmul(np.asarray(a), np.asarray(b)))
+
+
+def test_modmatmul_extreme(rng):
+    a = jnp.full((16, 1024), F.P - 1, jnp.int32)
+    b = jnp.full((1024, 16), F.P - 1, jnp.int32)
+    got = ops.modmatmul_exact(a, b, force_pallas=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), F.np_matmul(np.asarray(a), np.asarray(b)))
+
+
+@pytest.mark.parametrize("size,degree", [(64, 1), (4096, 1), (5000, 3),
+                                         (1, 2)])
+def test_poly_eval_kernel(rng, size, degree):
+    z = jnp.asarray(rng.integers(0, F.P, size=size).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, F.P, size=degree + 1).astype(np.int32))
+    got = ops.poly_eval(z, c, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.poly_eval(z, c)))
+
+
+@pytest.mark.parametrize("m,d,r", [(8, 8, 1), (256, 130, 1), (100, 600, 3),
+                                   (512, 512, 1)])
+def test_coded_gradient_fused(rng, m, d, r):
+    x = jnp.asarray(rng.integers(0, F.P, size=(m, d)).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, F.P, size=(d,)).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, F.P, size=(r + 1,)).astype(np.int32))
+    got = ops.coded_gradient(x, w, c, force_pallas=True)
+    exp = ref.coded_gradient(x, w, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    # independent uint64 oracle for the same composite
+    z = F.np_matmul(np.asarray(x), np.asarray(w)[:, None])[:, 0]
+    g = np.zeros_like(z)
+    for ci in reversed(np.asarray(c).astype(np.int64)):
+        g = (g * z + ci) % F.P
+    exp2 = F.np_matmul(np.asarray(x).T, g[:, None].astype(np.int32))[:, 0]
+    np.testing.assert_array_equal(np.asarray(got), exp2)
+
+
+def test_block_shape_sweep(rng):
+    """VMEM tiling choices must not change results."""
+    x = jnp.asarray(rng.integers(0, F.P, size=(96, 160)).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, F.P, size=(160,)).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    expected = np.asarray(ref.coded_gradient(x, w, c))
+    # NOTE: tiny blocks (8,8) mean thousands of interpret-mode grid steps
+    # (~minutes per combo on CPU); two contrasting tilings cover the
+    # index-map/accumulator logic just as well.
+    for bm, dc in ((32, 32), (96, 160)):
+        got = ops.coded_gradient(x, w, c, force_pallas=True, bm=bm, dc=dc)
+        np.testing.assert_array_equal(np.asarray(got), expected)

@@ -1,0 +1,109 @@
+"""Lagrange Coded Computing: the paper's central mechanism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field as F, lagrange
+
+
+def _poly_f(x, w, coeffs):
+    """f(X, w) = X^T ghat(Xw): degree 2r+1, the paper's Eq. 7."""
+    z = F.matmul(x, w[:, None])[:, 0]
+    g = F.evaluate_poly_dyn(coeffs, z)
+    return F.matmul(x.T, g[:, None])[:, 0]
+
+
+def _encode_model(rng, w, k, t, alphas, betas):
+    """w~_i = v(alpha_i) with v(beta_1..K) = w (paper Eq. 4).  Using the
+    CODED model matters: with a constant w the composed polynomial h(z)
+    degenerates to degree 2(K+T-1) and fewer evaluations suffice."""
+    wb = jnp.broadcast_to(w[None, None, :], (k, 1, w.shape[0]))
+    vm = jnp.asarray(rng.integers(0, F.P, size=(t, 1, w.shape[0])
+                                  ).astype(np.int32))
+    return lagrange.lcc_encode(wb, vm, alphas, betas)[:, 0, :]   # (N, d)
+
+
+@pytest.mark.parametrize("k,t,r", [(2, 1, 1), (3, 2, 1), (2, 1, 3)])
+def test_encode_compute_decode_roundtrip(rng, k, t, r):
+    """Decoding N coded evaluations of f recovers f(X_k, w) exactly."""
+    n = lagrange.recovery_threshold(r, k, t) + 2     # a couple spare clients
+    mk, d = 6, 4
+    alphas, betas = lagrange.default_points(n, k, t)
+    blocks = jnp.asarray(rng.integers(0, F.P, size=(k, mk, d)).astype(np.int32))
+    masks = jnp.asarray(rng.integers(0, F.P, size=(t, mk, d)).astype(np.int32))
+    coded = lagrange.lcc_encode(blocks, masks, alphas, betas)
+    assert coded.shape == (n, mk, d)
+
+    w = jnp.asarray(rng.integers(0, F.P, size=(d,)).astype(np.int32))
+    wc = _encode_model(rng, w, k, t, alphas, betas)
+    coeffs = jnp.asarray(rng.integers(0, F.P, size=(r + 1,)).astype(np.int32))
+    evals = jnp.stack([_poly_f(coded[i], wc[i], coeffs) for i in range(n)])
+
+    rthr = lagrange.recovery_threshold(r, k, t)
+    decoded = lagrange.lcc_decode(evals[:rthr], alphas[:rthr], betas, k)
+    expected = jnp.stack([_poly_f(blocks[i], w, coeffs) for i in range(k)])
+    np.testing.assert_array_equal(np.asarray(decoded), np.asarray(expected))
+
+
+def test_straggler_subsets_equivalent(rng):
+    """ANY R of the N evaluations decode to the same result -- the paper's
+    recovery threshold / our framework's straggler-mitigation claim."""
+    k, t, r = 2, 1, 1
+    rthr = lagrange.recovery_threshold(r, k, t)      # 3(K+T-1)+1 = 7
+    n = rthr + 3
+    alphas, betas = lagrange.default_points(n, k, t)
+    blocks = jnp.asarray(rng.integers(0, F.P, size=(k, 4, 3)).astype(np.int32))
+    masks = jnp.asarray(rng.integers(0, F.P, size=(t, 4, 3)).astype(np.int32))
+    coded = lagrange.lcc_encode(blocks, masks, alphas, betas)
+    w = jnp.asarray(rng.integers(0, F.P, size=(3,)).astype(np.int32))
+    wc = _encode_model(rng, w, k, t, alphas, betas)
+    coeffs = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    evals = jnp.stack([_poly_f(coded[i], wc[i], coeffs) for i in range(n)])
+
+    ref = None
+    for subset in [tuple(range(rthr)), tuple(range(3, 3 + rthr)),
+                   (0, 2, 4, 5, 6, 8, 9)]:
+        sub_alphas = [alphas[i] for i in subset]
+        dec = lagrange.lcc_decode(evals[jnp.asarray(subset)],
+                                  sub_alphas, betas, k)
+        dec = np.asarray(dec)
+        if ref is None:
+            ref = dec
+        else:
+            np.testing.assert_array_equal(dec, ref)
+
+
+def test_below_threshold_fails(rng):
+    """R-1 evaluations must NOT decode correctly (threshold is tight)."""
+    k, t, r = 2, 1, 1
+    rthr = lagrange.recovery_threshold(r, k, t)
+    n = rthr
+    alphas, betas = lagrange.default_points(n, k, t)
+    blocks = jnp.asarray(rng.integers(0, F.P, size=(k, 4, 3)).astype(np.int32))
+    masks = jnp.asarray(rng.integers(0, F.P, size=(t, 4, 3)).astype(np.int32))
+    coded = lagrange.lcc_encode(blocks, masks, alphas, betas)
+    w = jnp.asarray(rng.integers(0, F.P, size=(3,)).astype(np.int32))
+    wc = _encode_model(rng, w, k, t, alphas, betas)
+    coeffs = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    evals = jnp.stack([_poly_f(coded[i], wc[i], coeffs) for i in range(n)])
+    short = lagrange.lcc_decode(evals[: rthr - 1], alphas[: rthr - 1],
+                                betas, k)
+    expected = jnp.stack([_poly_f(blocks[i], w, coeffs) for i in range(k)])
+    assert not np.array_equal(np.asarray(short), np.asarray(expected))
+
+
+def test_coded_slices_uniform(rng):
+    """With T >= 1 random masks, each coded slice marginal looks uniform."""
+    k, t = 2, 1
+    n = 8
+    alphas, betas = lagrange.default_points(n, k, t)
+    blocks = jnp.zeros((k, 16, 8), jnp.int32)        # all-zero data!
+    vals = []
+    for i in range(50):
+        masks = F.random_field(jax.random.PRNGKey(i), (t, 16, 8))
+        coded = lagrange.lcc_encode(blocks, masks, alphas, betas)
+        vals.append(np.asarray(coded[0]).ravel())
+    m = np.mean(np.concatenate(vals)) / F.P
+    assert abs(m - 0.5) < 0.02   # uniform mean despite all-zero data

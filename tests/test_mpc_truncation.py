@@ -1,0 +1,67 @@
+"""Secure multiplication (BGW + BH08) and the TruncPr truncation protocol."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field as F, mpc, quantize, shamir, truncation
+
+
+@pytest.mark.parametrize("scheme", ["bgw", "bh08"])
+def test_secure_mult(rng, scheme):
+    t, n = 2, 7
+    a = jnp.asarray(rng.integers(0, F.P, size=(5,)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, F.P, size=(5,)).astype(np.int32))
+    sa = shamir.share(jax.random.PRNGKey(0), a, t, n)
+    sb = shamir.share(jax.random.PRNGKey(1), b, t, n)
+    fn = mpc.mul_bgw if scheme == "bgw" else mpc.mul_bh08
+    prod_shares = fn(jax.random.PRNGKey(2), sa, sb, t)
+    got = shamir.reconstruct(prod_shares, t)          # degree back to T
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(F.mul(a, b)))
+
+
+@pytest.mark.parametrize("scheme", ["bgw", "bh08"])
+def test_secure_matmul(rng, scheme):
+    t, n = 1, 5
+    a = rng.integers(0, F.P, size=(4, 6)).astype(np.int32)
+    b = rng.integers(0, F.P, size=(6, 3)).astype(np.int32)
+    sa = shamir.share(jax.random.PRNGKey(0), jnp.asarray(a), t, n)
+    sb = shamir.share(jax.random.PRNGKey(1), jnp.asarray(b), t, n)
+    fn = mpc.mul_bgw if scheme == "bgw" else mpc.mul_bh08
+    ps = fn(jax.random.PRNGKey(2), sa, sb, t, matmul=True)
+    got = shamir.reconstruct(ps, t)
+    np.testing.assert_array_equal(np.asarray(got), F.np_matmul(a, b))
+
+
+def test_truncation_is_stochastic_rounding():
+    """z = floor(a/2^k1) + Bernoulli(frac): mean over trials ~ a/2^k1, and
+    every sample is one of the two adjacent integers (paper Section III)."""
+    t, n, k1, k2 = 1, 5, 6, 20
+    a_val = 1000 * 64 + 13                            # frac = 13/64
+    a = jnp.full((256,), a_val, jnp.int32)
+    sh = shamir.share(jax.random.PRNGKey(0), a, t, n)
+    out_shares = truncation.trunc_pr(jax.random.PRNGKey(1), sh, k1, k2, t)
+    z = np.asarray(shamir.reconstruct(out_shares, t))
+    assert set(np.unique(z)) <= {1000, 1001}
+    mean = z.mean()
+    assert abs(mean - (1000 + 13 / 64)) < 0.1
+
+
+def test_truncation_negative_values():
+    """Signed fixed-point values (field embedding p+x) truncate correctly."""
+    t, n, k1, k2 = 1, 5, 4, 16
+    vals = np.array([-160, -33, 17, 240], np.int64)   # multiples + offsets
+    a = jnp.asarray(np.where(vals < 0, F.P + vals, vals).astype(np.int32))
+    sh = shamir.share(jax.random.PRNGKey(0), a, t, n)
+    outs = []
+    for i in range(200):
+        o = truncation.trunc_pr(jax.random.PRNGKey(i), sh, k1, k2, t)
+        outs.append(np.asarray(quantize.signed_value(
+            shamir.reconstruct(o, t))))
+    mean = np.mean(outs, axis=0)
+    np.testing.assert_allclose(mean, vals / 16, atol=0.15)
+
+
+def test_statistical_gap_documented():
+    assert truncation.statistical_gap(24) > 1.9      # ~2 bits at p=2^26-5

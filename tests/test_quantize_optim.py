@@ -1,0 +1,63 @@
+"""Quantization (App. A) + optimizer unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F, quantize
+from repro.optim import optimizers
+
+
+@given(st.floats(min_value=-100, max_value=100,
+                 allow_nan=False, allow_infinity=False),
+       st.integers(min_value=0, max_value=10))
+@settings(max_examples=100, deadline=None)
+def test_quantize_roundtrip(x, lx):
+    q = quantize.quantize(jnp.asarray([x], jnp.float32), lx)
+    back = float(quantize.dequantize(q, lx)[0])
+    assert abs(back - x) <= 0.5 / (1 << lx) + 1e-5
+
+
+def test_phi_embedding_negative():
+    q = quantize.quantize(jnp.asarray([-1.0, 1.0]), 3)
+    assert int(q[0]) == F.P - 8 and int(q[1]) == 8
+
+
+def test_signed_value():
+    v = quantize.signed_value(jnp.asarray([F.P - 5, 5], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(v), [-5, 5])
+
+
+def test_noise_variance_formula():
+    assert quantize.quantization_noise_variance(3073, 9019, 21) > 0
+
+
+@pytest.mark.parametrize("name", ["adamw", "sgdm", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = optimizers.make(name, optimizers.OptConfig(
+        name=name, lr=0.1, weight_decay=0.0))
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    for step in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params,
+                                      jnp.asarray(step, jnp.int32))
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adafactor_state_is_factored():
+    opt = optimizers.make("adafactor")
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((7,))}
+    st_ = opt.init(params)
+    assert st_["f"]["w"]["vr"].shape == (64,)
+    assert st_["f"]["w"]["vc"].shape == (32,)
+    assert st_["f"]["b"]["v"].shape == (7,)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = optimizers.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(optimizers.global_norm(clipped)) == pytest.approx(1.0, rel=1e-3)

@@ -18,13 +18,20 @@ from repro.core import field as F
 from repro.kernels import ops, ref
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)                      # compile/warm
-    t0 = time.perf_counter()
+def _time(fn, *args, reps=5):
+    """Best-of-reps wall time: min is robust to scheduler noise on a
+    shared host, unlike the mean."""
+    out = fn(*args)                # compile/warm
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
-    return (time.perf_counter() - t0) / reps
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(report):
@@ -57,4 +64,84 @@ def run(report):
     report("kernel_micro/poly_eval_pallas_interp", dt * 1e6,
            f"{z.size / dt / 1e6:.1f}_Melem_s")
 
+    run_multiclient(report)
+
     return macs / _time(jitted, a, b)      # field MAC/s for the cost model
+
+
+def run_multiclient(report):
+    """Batched multi-client coded gradient (COPML Phase 3, all N clients)
+    vs the per-client-vmap baseline, on the default execution path for this
+    host (the jnp limb algorithm -- what Copml.local_gradient runs when
+    REPRO_USE_PALLAS is unset).  The batched engine packs the 7-bit limbs
+    into the GEMM dimensions instead of issuing 16 n=1 matvecs per client.
+    """
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    # shapes sized so each timed call is >= tens of ms: sub-ms shapes are
+    # dominated by scheduler noise on a shared host
+    for n_clients, mk, d in ((8, 1024, 512), (16, 512, 384), (32, 512, 256)):
+        x = jnp.asarray(
+            rng.integers(0, F.P, size=(n_clients, mk, d)).astype(np.int32))
+        w = jnp.asarray(
+            rng.integers(0, F.P, size=(n_clients, d)).astype(np.int32))
+        vmapped = jax.jit(lambda xx, ww, cc: ref.coded_gradient_vmap(
+            xx, ww, cc))
+        batched = jax.jit(lambda xx, ww, cc: ref.coded_gradient_batched(
+            xx, ww, cc))
+        np.testing.assert_array_equal(np.asarray(vmapped(x, w, c)),
+                                      np.asarray(batched(x, w, c)))
+        # interleave the two candidates so background load hits both alike
+        # (both are compiled+warm from the correctness check above)
+        tv, tb = float("inf"), float("inf")
+        for _ in range(7):
+            t0 = time.perf_counter()
+            vmapped(x, w, c).block_until_ready()
+            tv = min(tv, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            batched(x, w, c).block_until_ready()
+            tb = min(tb, time.perf_counter() - t0)
+        report(f"kernel_micro/coded_gradient_vmap_n{n_clients}", tv * 1e6,
+               f"m{mk}_d{d}")
+        report(f"kernel_micro/coded_gradient_batched_n{n_clients}", tb * 1e6,
+               f"speedup_{tv / tb:.2f}x_vs_vmap")
+
+
+def run_engine(report):
+    """Protocol engine: eager per-step dispatch vs the lax.scan train_jit.
+
+    Measures end-to-end training wall time (setup included for both; both
+    step programs are compiled and warm, so the delta is per-iteration
+    dispatch only).  On a single CPU host the two are near wall parity --
+    the scan engine's wins are the single dispatch (no N-step Python
+    round-trips, which matters on real accelerators) and the in-graph
+    model history that makes callbacks free."""
+    import jax.random as jrandom
+    import time as _t
+
+    from repro.core.protocol import Copml, CopmlConfig, case1_params
+    from repro.data import pipeline
+
+    x, y = pipeline.classification_dataset(m=208, d=12, seed=1, margin=2.0)
+    n = 13
+    k, t = case1_params(n)
+    cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=1.0)
+    proto = Copml(cfg, x.shape[0], x.shape[1])
+    cx, cy = pipeline.split_clients(x, y, n)
+    iters = 20
+    key = jrandom.PRNGKey(0)
+
+    runners = (("eager", proto.train_eager), ("scan", proto.train_jit))
+    best = {name: float("inf") for name, _ in runners}
+    for name, fn in runners:                   # compile/warm both
+        fn(key, cx, cy, iters)
+    for _ in range(3):                         # interleaved best-of-reps
+        for name, fn in runners:
+            t0 = _t.perf_counter()
+            _, w = fn(key, cx, cy, iters)[:2]
+            jax.block_until_ready(w)
+            best[name] = min(best[name], _t.perf_counter() - t0)
+    for name, _ in runners:
+        dt = best[name]
+        report(f"kernel_micro/copml_train_{name}_{iters}it", dt * 1e6,
+               f"{iters / dt:.1f}_steps_s")

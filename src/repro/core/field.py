@@ -213,6 +213,33 @@ def matvec(a, v):
     return matmul(a, v[:, None])[:, 0]
 
 
+def matvec_batched(a, v):
+    """(a[i] @ v[i]) mod p for a: (B, M, K), v: (B, K) -- limb-packed GEMM.
+
+    A vmap of matvec runs 16 (M, kc) x (kc, 1) limb matvecs per batch
+    element; packing the 4 limbs of `a` into the GEMM M dimension and the 4
+    limbs of `v` into its N dimension turns each K-chunk into ONE
+    (B, 4M, kc) x (B, kc, 4) batched matmul -- a far better gemm shape than
+    n=1 matvecs (1.25x over the vmap at B=8, 2.6x at B=32 on XLA CPU), with
+    identical recombination cost.  Exactness bounds are unchanged: products
+    < 2^14 accumulated over kc <= 2^10 stay in f32's exact-integer range.
+    """
+    bsz, m, k = a.shape
+    assert v.shape == (bsz, k), (a.shape, v.shape)
+    out = jnp.zeros((bsz, m), jnp.int32)
+    for start in range(0, k, MATMUL_CHUNK):
+        stop = min(start + MATMUL_CHUNK, k)
+        al = jax.vmap(_limbs)(a[:, :, start:stop])       # (B, 4, M, kc)
+        vl = jax.vmap(_limbs)(v[:, start:stop])          # (B, 4, kc)
+        s = jnp.matmul(al.reshape(bsz, _N_LIMBS * m, stop - start),
+                       jnp.swapaxes(vl, 1, 2),
+                       preferred_element_type=jnp.float32)
+        s = s.reshape(bsz, _N_LIMBS, m, _N_LIMBS)        # (B, i, M, j)
+        out = add(out, _recombine_limb_products(
+            jnp.transpose(s, (1, 3, 0, 2))))             # (i, j, B, M)
+    return out
+
+
 def evaluate_poly(coeffs, x):
     """Horner evaluation of sum_i coeffs[i] * x^i over F_p.
 

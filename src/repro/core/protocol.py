@@ -134,22 +134,30 @@ class Copml:
         """Phases 1-2 (one-time): quantize, secret-share, LCC-encode, X^T y.
 
         client_xs[j]: (m_j, d) float arrays; client_ys[j]: (m_j,) in {0,1}.
+
+        Fully batched: clients' rows are stacked once and every phase is one
+        vectorized field op -- no per-client Python loop.  Sharing the
+        stacked rows in a single shamir.share call is distribution-identical
+        to per-client sharing (the masking polynomial draws independent
+        randomness per element either way) and collapses N share matmuls
+        into one.  It also gives X and y sharing independent keys (the old
+        loop reused keys[j] for both, correlating their masks).
         """
         cfg, n = self.cfg, self.cfg.n_clients
-        keys = jax.random.split(key, n + 4)
+        keys = jax.random.split(key, 6)
 
-        # Phase 1 (LOCAL): quantize into F_p
-        xq = [quantize.quantize(jnp.asarray(x), cfg.lx) for x in client_xs]
-        yq = [quantize.quantize(jnp.asarray(y, jnp.float32), cfg.lg)
-              for y in client_ys]
+        # Phase 1 (LOCAL): quantize into F_p -- one call over all rows
+        xq = quantize.quantize(
+            jnp.concatenate([jnp.asarray(x) for x in client_xs], axis=0),
+            cfg.lx)                                           # (m, d)
+        yq = quantize.quantize(
+            jnp.concatenate([jnp.asarray(y, jnp.float32) for y in client_ys],
+                            axis=0), cfg.lg)                  # (m,)
 
-        # Phase 2a (EXCHANGE): Shamir-share every client's data
-        x_shares = jnp.concatenate(
-            [shamir.share(keys[j], xq[j], cfg.t, n, self.lambdas)
-             for j in range(n)], axis=1)                      # (N, m, d)
-        y_shares = jnp.concatenate(
-            [shamir.share(keys[j], yq[j], cfg.t, n, self.lambdas)
-             for j in range(n)], axis=1)                      # (N, m)
+        # Phase 2a (EXCHANGE): Shamir-share every client's data (batched)
+        x_shares = shamir.share(keys[0], xq, cfg.t, n, self.lambdas)
+        y_shares = shamir.share(keys[1], yq, cfg.t, n, self.lambdas)
+        # (N, m, d) / (N, m)
 
         # Phase 2b (LOCAL on shares): partition rows into K blocks
         blocks, self.pad = jax.vmap(
@@ -157,8 +165,8 @@ class Copml:
         # blocks: (N, K, mk, d)
 
         # shared random masks Z_{K+1..K+T} (offline randomness, fn. 3)
-        z = field.random_field(keys[n], (cfg.t, blocks.shape[2], self.d))
-        z_shares = shamir.share(keys[n + 1], z, cfg.t, n, self.lambdas)
+        z = field.random_field(keys[2], (cfg.t, blocks.shape[2], self.d))
+        z_shares = shamir.share(keys[3], z, cfg.t, n, self.lambdas)
         # (N, T, mk, d)
 
         # Phase 2c (LOCAL): LCC-encode the shares; (EXCHANGE): reconstruct
@@ -170,16 +178,17 @@ class Copml:
 
         # Phase 2d: X^T y via one secure matmul (degree reduction included)
         xty_shares = self._mul(
-            keys[n + 2],
+            keys[4],
             jnp.swapaxes(x_shares, 1, 2), y_shares[..., None],
             cfg.t, matmul=True, points=self.lambdas)[..., 0]    # (N, d)
 
         # model init within MPC: w^(0) = 0 shared
         w_shares = shamir.share(
-            keys[n + 3], jnp.zeros((self.d,), field.FIELD_DTYPE),
+            keys[5], jnp.zeros((self.d,), field.FIELD_DTYPE),
             cfg.t, n, self.lambdas)
         return CopmlState(w_shares=w_shares, coded_x=coded_x,
-                          xty_shares=xty_shares)
+                          xty_shares=xty_shares,
+                          step=jnp.asarray(0, jnp.int32))
 
     # ------------------------------------------------------- one GD iteration
 
@@ -190,8 +199,12 @@ class Copml:
         v(beta_k) = w for all k in [K]; T random vectors v_k pad the tail.
         """
         cfg, n = self.cfg, self.cfg.n_clients
-        v = field.random_field(key, (cfg.t, self.d))
-        v_shares = shamir.share(key, v, cfg.t, n, self.lambdas)  # (N,T,d)
+        kv, ks = jax.random.split(key)
+        # distinct keys: drawing v and its sharing polynomial from the same
+        # key makes the sharing coefficients EQUAL v (same threefry stream),
+        # letting any single share reveal the mask
+        v = field.random_field(kv, (cfg.t, self.d))
+        v_shares = shamir.share(ks, v, cfg.t, n, self.lambdas)  # (N,T,d)
         blocks = jnp.broadcast_to(
             w_shares[:, None], (n, cfg.k, self.d))               # same w in K slots
         enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
@@ -208,12 +221,14 @@ class Copml:
     def local_gradient(self, coded_x, coded_w):
         """Phase 3 (LOCAL, the hot loop): f(X~_i, w~_i) = X~_i^T ghat(X~_i w~_i).
 
-        Pure field compute on *clear coded* data -- this is what the Pallas
-        kernels accelerate (kernels/ops.coded_gradient).
+        Pure field compute on *clear coded* data.  All N clients run in ONE
+        batched call (kernels/ops.coded_gradient_batched): a single
+        (N, m/bm)-grid Pallas launch on TPU, limb-packed batched GEMMs on
+        the jnp reference path -- not N per-client dispatches via vmap.
         """
         from ..kernels import ops as kernel_ops
-        return jax.vmap(lambda x, w: kernel_ops.coded_gradient(
-            x, w, self.poly_coeffs))(coded_x, coded_w)           # (N, d)
+        return kernel_ops.coded_gradient_batched(
+            coded_x, coded_w, self.poly_coeffs)                  # (N, d)
 
     def decode_and_update(self, key, state: CopmlState, f_values,
                           subset: Sequence[int] | None = None):
@@ -265,22 +280,92 @@ class Copml:
         f_values = self.local_gradient(state.coded_x, coded_w)
         return self.decode_and_update(k2_, state, f_values, subset)
 
+    def _jitted_step(self, subset):
+        """Per-instance cache: a fresh jax.jit(partial(...)) every call
+        would retrace/recompile the step on each train_eager invocation."""
+        cache = self.__dict__.setdefault("_step_cache", {})
+        if subset not in cache:
+            cache[subset] = jax.jit(partial(self.iteration, subset=subset))
+        return cache[subset]
+
     # ------------------------------------------------------------------ train
 
-    def train(self, key, client_xs, client_ys, iters: int,
-              subset: Sequence[int] | None = None,
-              callback=None) -> tuple:
+    def train_jit(self, key, client_xs, client_ys, iters: int,
+                  subset: Sequence[int] | None = None,
+                  history: bool = False) -> tuple:
+        """Run setup + `iters` GD iterations as ONE compiled lax.scan.
+
+        The whole training loop is a single XLA program (one compile, one
+        dispatch) instead of `iters` Python round-trips -- same per-step
+        randomness (fold_in of the iteration key) and therefore bit-exact
+        against the eager loop (`train_eager`).  With history=True the scan
+        also stacks the opened model after every step (used by the callback
+        wrapper in `train` and by convergence diagnostics); opening inside
+        the scan is trace-time work, not an extra communication round.
+
+        Returns (state, w) or (state, w, history (iters, d)).
+        """
         ks, ki = jax.random.split(key)
         state = self.setup(ks, client_xs, client_ys)
-        step = jax.jit(partial(self.iteration, subset=subset))
+        subset = None if subset is None else tuple(subset)
+        state, hist = _scan_iterations(self, ki, state, int(iters), subset,
+                                       bool(history))
+        w = self.open_model(state)
+        return (state, w, hist) if history else (state, w)
+
+    def train_eager(self, key, client_xs, client_ys, iters: int,
+                    subset: Sequence[int] | None = None,
+                    callback=None) -> tuple:
+        """Reference trainer: Python loop, one jitted iteration per step.
+
+        Kept as the ground truth the scan engine is verified against
+        (tests/test_protocol.py) and for step-through debugging.
+        """
+        ks, ki = jax.random.split(key)
+        state = self.setup(ks, client_xs, client_ys)
+        step = self._jitted_step(None if subset is None else tuple(subset))
         for t in range(iters):
             state = step(jax.random.fold_in(ki, t), state)
             if callback is not None:
                 callback(t, self.open_model(state))
         return state, self.open_model(state)
 
+    def train(self, key, client_xs, client_ys, iters: int,
+              subset: Sequence[int] | None = None,
+              callback=None) -> tuple:
+        """Public API: scan-compiled training; callback replayed post-hoc.
+
+        The per-step model history comes out of the single compiled scan, so
+        callbacks no longer force a host round-trip every iteration.
+        """
+        if callback is None:
+            return self.train_jit(key, client_xs, client_ys, iters,
+                                  subset=subset)
+        state, w, hist = self.train_jit(key, client_xs, client_ys, iters,
+                                        subset=subset, history=True)
+        for t in range(iters):
+            callback(t, hist[t])
+        return state, w
+
     def open_model(self, state: CopmlState):
         """Reconstruct and dequantize the model (only done at the end /
         for evaluation; during training clients hold only shares)."""
         w_field = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
         return quantize.dequantize(w_field, self.cfg.lw)
+
+
+@partial(jax.jit, static_argnames=("proto", "iters", "subset", "history"))
+def _scan_iterations(proto: Copml, key, state: CopmlState, iters: int,
+                     subset, history: bool):
+    """lax.scan over GD iterations; the whole loop is one XLA program.
+
+    `proto` is static (hashed by identity): the scan recompiles per protocol
+    instance but runs every iteration inside a single dispatch.  Per-step
+    keys are fold_in(key, t) -- identical to the eager loop's schedule.
+    """
+
+    def body(st, t):
+        st = proto.iteration(jax.random.fold_in(key, t), st, subset)
+        return st, (proto.open_model(st) if history else None)
+
+    return jax.lax.scan(body, state, jnp.arange(iters))

@@ -96,10 +96,14 @@ def reconstruct(shares, t: int, points: Sequence[int] | None = None,
 
 def share_batch(key, secrets, t: int, n: int,
                 points: Sequence[int] | None = None):
-    """vmap of share over a leading owners axis: secrets (M, ...) ->
-    shares (M, N, ...)."""
-    keys = jax.random.split(key, secrets.shape[0])
-    return jax.vmap(lambda k, s: share(k, s, t, n, points))(keys, secrets)
+    """Share J independent secrets (leading axis = owners) in ONE matmul:
+    secrets (J, ...) -> shares (J, N, ...).
+
+    Because every owner uses the same public power matrix, the owner axis
+    folds into the element axis -- which is exactly what `share` of the
+    stacked array already computes (its coefficient draw is (T, J, ...):
+    independent per-owner polynomials), so this is share + transpose."""
+    return jnp.swapaxes(share(key, secrets, t, n, points), 0, 1)
 
 
 def reshare(key, shares, t: int, n: int, points: Sequence[int] | None = None):

@@ -9,6 +9,13 @@ matvec pair), so this is a ~2x win on the memory roofline term.
 Grid: one dimension over row blocks of X~; the (d,) output accumulator lives
 in VMEM and is revisited by every grid step.  Field arithmetic follows
 modmatmul.py: 7-bit limbs -> exact f32 MXU products -> int32 recombination.
+
+`coded_gradient_batched` adds a leading client dimension: the COPML hot loop
+computes f for ALL N clients every iteration (each with its own coded slice
+X~_i and coded model w~_i), so a (N, m/bm) grid runs the whole round as ONE
+pallas_call -- one dispatch, one pipeline, w~_i resident in VMEM across a
+client's row blocks -- instead of N single-client launches under an outer
+vmap.
 """
 
 from __future__ import annotations
@@ -50,21 +57,19 @@ def _limb_dot_mod(a, b, contract_a: int, contract_b: int):
     return acc
 
 
-def _kernel(x_ref, w_ref, c_ref, o_ref, *, degree: int, dc: int):
-    i = pl.program_id(0)
+def _fused_block(x, w, c_ref, o_ref, pre: tuple, *, degree: int, dc: int):
+    """Shared body: one (bm, d) row block of one client's coded slice.
 
-    @pl.when(i == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...]                      # (bm, d)
+    `pre` indexes into o_ref ahead of the d-slice: () for the single-client
+    kernel's (d,) output block, (0,) for the batched kernel's (1, d) block.
+    """
     bm, d = x.shape
 
     # pass 1: z = (X_blk @ w) mod p, chunked over d for f32 exactness
     z = jnp.zeros((bm,), jnp.int32)
     for c in range(0, d, dc):
         xc = x[:, c:c + dc]
-        wc = w_ref[c:c + dc]
+        wc = w[c:c + dc]
         z = field.add(z, _limb_dot_mod(xc, wc[:, None], 1, 0)[:, 0])
 
     # ghat(z): unrolled Horner (VPU)
@@ -76,7 +81,30 @@ def _kernel(x_ref, w_ref, c_ref, o_ref, *, degree: int, dc: int):
     for c in range(0, d, dc):
         xc = x[:, c:c + dc]
         upd = _limb_dot_mod(xc, g[:, None], 0, 0)[:, 0]   # (dc,)
-        o_ref[c:c + dc] = field.add(o_ref[c:c + dc], upd)
+        sl = pre + (slice(c, c + dc),)
+        o_ref[sl] = field.add(o_ref[sl], upd)
+
+
+def _kernel(x_ref, w_ref, c_ref, o_ref, *, degree: int, dc: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _fused_block(x_ref[...], w_ref[...], c_ref, o_ref, (),
+                 degree=degree, dc=dc)
+
+
+def _kernel_batched(x_ref, w_ref, c_ref, o_ref, *, degree: int, dc: int):
+    i = pl.program_id(1)                # row-block index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _fused_block(x_ref[0], w_ref[0], c_ref, o_ref, (0,),
+                 degree=degree, dc=dc)
 
 
 @functools.partial(jax.jit,
@@ -102,5 +130,35 @@ def coded_gradient(x, w, coeffs, *, bm: int = DEFAULT_BM,
         ],
         out_specs=pl.BlockSpec((d,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        interpret=interpret,
+    )(x, w, coeffs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "dc", "interpret"))
+def coded_gradient_batched(x, w, coeffs, *, bm: int = DEFAULT_BM,
+                           dc: int = DEFAULT_DC, interpret: bool = True):
+    """f[n] = (x[n]^T ghat(x[n] @ w[n])) mod p for all N clients at once.
+
+    x: (N, m, d) int32 field; w: (N, d); coeffs: (r+1,) shared across
+    clients (same ghat everywhere).  m % bm == 0, d % dc == 0 (ops.py pads).
+    Grid (N, m/bm): the row-block dimension is innermost so client n's
+    output block and w~_n stay VMEM-resident across its whole slice.
+    """
+    nb, m, d = x.shape
+    assert w.shape == (nb, d), (x.shape, w.shape)
+    assert m % bm == 0 and d % dc == 0, (x.shape, bm, dc)
+    assert bm <= 1024 and dc <= 1024
+    degree = coeffs.shape[0] - 1
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, degree=degree, dc=dc),
+        grid=(nb, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, d), lambda n, i: (n, 0)),
+            pl.BlockSpec((coeffs.shape[0],), lambda n, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda n, i: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, d), jnp.int32),
         interpret=interpret,
     )(x, w, coeffs)

@@ -9,6 +9,10 @@ back to F_p is pure int32 (13-bit-limb modular multiply, every intermediate
 
 Grid: (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics); the
 output block is revisited across the K dimension and accumulated in VMEM.
+
+`modmatmul_batched` prepends a batch dimension -- grid (B, M/bm, N/bn, K/bk)
+-- so B independent field matmuls (e.g. one per COPML client) run as a single
+pallas_call instead of B launches under an outer vmap.
 """
 
 from __future__ import annotations
@@ -81,5 +85,41 @@ def modmatmul(a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _kernel_batched(a_ref, b_ref, o_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] = field.add(o_ref[0], _limb_matmul_mod(a_ref[0], b_ref[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def modmatmul_batched(a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK, interpret: bool = True):
+    """(a[i] @ b[i]) mod p for all i.  a: (B, M, K), b: (B, K, N) int32.
+
+    M/N/K must be multiples of the block sizes (ops.py pads).
+    """
+    bsz, m, k = a.shape
+    bsz2, k2, n = b.shape
+    assert bsz == bsz2 and k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+    assert bk <= 1024, "bk > 1024 breaks exact f32 limb accumulation"
+    grid = (bsz, m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bi, i, j, kk: (bi, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bi, i, j, kk: (bi, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), jnp.int32),
         interpret=interpret,
     )(a, b)

@@ -32,9 +32,10 @@ def _pad_to(x, axis, mult):
 
 
 def modmatmul(a, b, *, bm=None, bn=None, bk=None, force_pallas: bool = False):
-    """(a @ b) mod p with padding to block multiples."""
+    """(a @ b) mod p with padding to block multiples; exact (M, N) output."""
     if not (USE_PALLAS or force_pallas):
         return ref.modmatmul(a, b)
+    m, n = a.shape[0], b.shape[1]
     bm = bm or min(_mm.DEFAULT_BM, max(8, a.shape[0]))
     bn = bn or min(_mm.DEFAULT_BN, max(8, b.shape[1]))
     bk = bk or min(_mm.DEFAULT_BK, max(8, a.shape[1]))
@@ -43,12 +44,32 @@ def modmatmul(a, b, *, bm=None, bn=None, bk=None, force_pallas: bool = False):
     b, _ = _pad_to(b, 0, bk)
     b, _ = _pad_to(b, 1, bn)
     out = _mm.modmatmul(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
-    return out  # caller slices; convenience below
+    return out[:m, :n]
 
 
-def modmatmul_exact(a, b, **kw):
-    m, n = a.shape[0], b.shape[1]
-    return modmatmul(a, b, **kw)[:m, :n]
+# historical alias: modmatmul itself now returns the exact shape
+modmatmul_exact = modmatmul
+
+
+def modmatmul_batched(a, b, *, bm=None, bn=None, bk=None,
+                      force_pallas: bool = False):
+    """(a[i] @ b[i]) mod p over a leading batch axis, exact (B, M, N) out.
+
+    One (B, M/bm, N/bn, K/bk)-grid pallas_call instead of B launches.
+    """
+    if not (USE_PALLAS or force_pallas):
+        return ref.modmatmul_batched(a, b)
+    m, n = a.shape[1], b.shape[2]
+    bm = bm or min(_mm.DEFAULT_BM, max(8, m))
+    bn = bn or min(_mm.DEFAULT_BN, max(8, n))
+    bk = bk or min(_mm.DEFAULT_BK, max(8, a.shape[2]))
+    a, _ = _pad_to(a, 1, bm)
+    a, _ = _pad_to(a, 2, bk)
+    b, _ = _pad_to(b, 1, bk)
+    b, _ = _pad_to(b, 2, bn)
+    out = _mm.modmatmul_batched(a, b, bm=bm, bn=bn, bk=bk,
+                                interpret=INTERPRET)
+    return out[:, :m, :n]
 
 
 def poly_eval(z, coeffs, *, block=None, force_pallas: bool = False):
@@ -78,3 +99,23 @@ def coded_gradient(x, w, coeffs, *, bm=None, dc=None,
     w, _ = _pad_to(w, 0, dc)
     out = _cg.coded_gradient(x, w, coeffs, bm=bm, dc=dc, interpret=INTERPRET)
     return out[:d0] if dpad else out
+
+
+def coded_gradient_batched(x, w, coeffs, *, bm=None, dc=None,
+                           force_pallas: bool = False):
+    """f[n] = x[n]^T ghat(x[n] w[n]) for all N clients in ONE kernel launch.
+
+    x: (N, m, d); w: (N, d); coeffs shared.  This is COPML's whole Phase-3
+    round (every client's Eq. 7 evaluation) as a single (N, m/bm) grid.
+    """
+    if not (USE_PALLAS or force_pallas):
+        return ref.coded_gradient_batched(x, w, coeffs)
+    d0 = x.shape[2]
+    bm = bm or min(_cg.DEFAULT_BM, max(8, x.shape[1]))
+    dc = dc or min(_cg.DEFAULT_DC, max(8, d0))
+    x, _ = _pad_to(x, 1, bm)
+    x, dpad = _pad_to(x, 2, dc)
+    w, _ = _pad_to(w, 1, dc)
+    out = _cg.coded_gradient_batched(x, w, coeffs, bm=bm, dc=dc,
+                                     interpret=INTERPRET)
+    return out[:, :d0] if dpad else out

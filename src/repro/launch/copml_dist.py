@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import field
+from ..core import field, meshutil
 from ..core.protocol import Copml, CopmlConfig, CopmlState, case2_params
 from . import roofline as RL
 
@@ -88,7 +88,7 @@ def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
     state = state_structs(proto, mesh)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32,
                                sharding=NamedSharding(mesh, P()))
-    with jax.set_mesh(mesh):
+    with meshutil.set_mesh(mesh):
         lowered = jax.jit(proto.iteration).lower(key, state)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()

@@ -8,19 +8,18 @@ from __future__ import annotations
 
 import jax
 
+from ..core import meshutil
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return meshutil.make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has (tests / examples)."""
     n = len(jax.devices())
     mp = min(model_parallel, n)
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return meshutil.make_mesh((n // mp, mp), ("data", "model"))

@@ -18,9 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-
-from ..core import lagrange
+from ..core import lagrange, meshutil
 
 
 def replan_mesh(n_devices: int, prefer_model: int = 16):
@@ -29,9 +27,7 @@ def replan_mesh(n_devices: int, prefer_model: int = 16):
     while model > 1 and (n_devices % model or model > n_devices):
         model //= 2
     data = n_devices // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return meshutil.make_mesh((data, model), ("data", "model"))
 
 
 @dataclasses.dataclass(frozen=True)

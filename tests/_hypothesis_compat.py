@@ -1,0 +1,110 @@
+"""Deterministic fallback for `hypothesis` when it cannot be installed.
+
+Installed into sys.modules by conftest.py ONLY if the real hypothesis is
+absent, so `from hypothesis import given, settings, strategies as st` keeps
+working everywhere.  Each @given test then runs on a handful of
+deterministic examples drawn from the declared strategies: the boundary
+values of every strategy first, then seeded pseudo-random draws.  This is
+not property-based testing -- it is a smoke lane that keeps the 3 affected
+modules collecting and exercising the same assertions on every host.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_FALLBACK_EXAMPLES = 8   # "a handful": boundary cases + seeded random draws
+
+
+class _Strategy:
+    """A strategy is just a deterministic example generator here."""
+
+    def __init__(self, gen):
+        self._gen = gen
+
+    def examples(self, n: int, rng: random.Random):
+        return self._gen(n, rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+    def gen(n, rng):
+        out = []
+        for v in (lo, hi, (lo + hi) // 2):
+            if lo <= v <= hi and v not in out:
+                out.append(v)
+        while len(out) < n:
+            out.append(rng.randint(lo, hi))
+        return out[:n]
+
+    return _Strategy(gen)
+
+
+def floats(min_value=None, max_value=None, allow_nan=True,
+           allow_infinity=True, width=64):
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def gen(n, rng):
+        out = []
+        for v in (lo, hi, 0.0, 1.0, -1.0, (lo + hi) / 2):
+            if lo <= v <= hi and v not in out:
+                out.append(v)
+        while len(out) < n:
+            out.append(rng.uniform(lo, hi))
+        return out[:n]
+
+    return _Strategy(gen)
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    """Records max_examples on the test; the fallback caps it anyway."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Run the wrapped test once per deterministic example tuple.
+
+    The wrapper deliberately exposes a bare (*args, **kwargs) signature --
+    no functools.wraps -- so pytest does not mistake the strategy-filled
+    parameters for fixtures.
+    """
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(fn, "_compat_max_examples", None)
+                    or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+            rng = random.Random(0)
+            columns = [s.examples(n, rng) for s in strategies]
+            for row in zip(*columns):
+                fn(*args, *row, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register stub `hypothesis` + `hypothesis.strategies` modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    mod.strategies = strat
+    mod.__is_repro_compat_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,5 +1,6 @@
 """Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp ref vs uint64."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,12 +20,14 @@ from repro.kernels import ops, ref
 def test_modmatmul_shapes(rng, m, k, n):
     a = jnp.asarray(rng.integers(0, F.P, size=(m, k)).astype(np.int32))
     b = jnp.asarray(rng.integers(0, F.P, size=(k, n)).astype(np.int32))
-    got = ops.modmatmul_exact(a, b, force_pallas=True)
+    got = ops.modmatmul(a, b, force_pallas=True)
+    assert got.shape == (m, n)          # exact shape, padding sliced off
     np.testing.assert_array_equal(
         np.asarray(got), F.np_matmul(np.asarray(a), np.asarray(b)))
     np.testing.assert_array_equal(
         np.asarray(ref.modmatmul(a, b)),
         F.np_matmul(np.asarray(a), np.asarray(b)))
+    assert ops.modmatmul_exact is ops.modmatmul   # historical alias
 
 
 @given(st.integers(1, 40), st.integers(1, 50), st.integers(1, 30),
@@ -74,6 +77,54 @@ def test_coded_gradient_fused(rng, m, d, r):
         g = (g * z + ci) % F.P
     exp2 = F.np_matmul(np.asarray(x).T, g[:, None].astype(np.int32))[:, 0]
     np.testing.assert_array_equal(np.asarray(got), exp2)
+
+
+@pytest.mark.parametrize("nb,m,d,r", [(8, 64, 32, 1), (5, 96, 40, 3)])
+def test_coded_gradient_batched_matches_vmap(rng, nb, m, d, r):
+    """Batched engines == per-client vmap of the single-client kernel,
+    element-for-element mod p (second case exercises the padding path)."""
+    x = jnp.asarray(rng.integers(0, F.P, size=(nb, m, d)).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, F.P, size=(nb, d)).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, F.P, size=(r + 1,)).astype(np.int32))
+    expected = np.asarray(jax.vmap(
+        lambda xi, wi: ops.coded_gradient(xi, wi, c, force_pallas=True,
+                                          bm=32, dc=16))(x, w))
+    # jnp reference path (limb-packed batched GEMM)
+    np.testing.assert_array_equal(
+        np.asarray(ref.coded_gradient_batched(x, w, c)), expected)
+    np.testing.assert_array_equal(
+        np.asarray(ref.coded_gradient_vmap(x, w, c)), expected)
+    # batched-grid Pallas kernel (interpret)
+    got = ops.coded_gradient_batched(x, w, c, force_pallas=True,
+                                     bm=32, dc=16)
+    np.testing.assert_array_equal(np.asarray(got), expected)
+
+
+@pytest.mark.parametrize("bsz,m,k,n", [(4, 32, 48, 24), (3, 30, 70, 18)])
+def test_modmatmul_batched_matches_vmap(rng, bsz, m, k, n):
+    a = jnp.asarray(rng.integers(0, F.P, size=(bsz, m, k)).astype(np.int32))
+    b = jnp.asarray(rng.integers(0, F.P, size=(bsz, k, n)).astype(np.int32))
+    expected = np.stack([F.np_matmul(np.asarray(a[i]), np.asarray(b[i]))
+                         for i in range(bsz)])
+    got = ops.modmatmul_batched(a, b, force_pallas=True, bm=16, bn=16, bk=32)
+    assert got.shape == (bsz, m, n)
+    np.testing.assert_array_equal(np.asarray(got), expected)
+    np.testing.assert_array_equal(
+        np.asarray(ref.modmatmul_batched(a, b)), expected)
+    vmapped = np.asarray(jax.vmap(
+        lambda ai, bi: ops.modmatmul(ai, bi, force_pallas=True,
+                                     bm=16, bn=16, bk=32))(a, b))
+    np.testing.assert_array_equal(vmapped, expected)
+
+
+def test_matvec_batched_extreme(rng):
+    """All-(p-1) operands through the limb-packed batched GEMM."""
+    a = jnp.full((3, 8, F.MATMUL_CHUNK + 5), F.P - 1, jnp.int32)
+    v = jnp.full((3, F.MATMUL_CHUNK + 5), F.P - 1, jnp.int32)
+    got = np.asarray(F.matvec_batched(a, v))
+    exp = F.np_matmul(np.asarray(a[0]), np.asarray(v[0])[:, None])[:, 0]
+    for i in range(3):
+        np.testing.assert_array_equal(got[i], exp)
 
 
 def test_block_shape_sweep(rng):

@@ -101,9 +101,9 @@ def test_data_determinism_and_host_slicing():
 
 def test_partition_normalize_drops_bad_axes():
     from jax.sharding import PartitionSpec as P
+    from repro.core import meshutil
     from repro.sharding import partition
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = meshutil.make_mesh((1, 1), ("data", "model"))
     sp = partition.normalize(P(("pod", "data"), "model"), (7, 13), mesh)
     # "pod" absent -> dropped; sizes 1 always divide
     assert len(tuple(sp)) == 2
@@ -112,9 +112,9 @@ def test_partition_normalize_drops_bad_axes():
 
 
 def test_zero_spec_shards_largest_free_dim():
+    from repro.core import meshutil
     from repro.sharding import partition
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = meshutil.make_mesh((1, 1), ("data", "model"))
     sp = partition.zero_spec((None, "model", None, None),
                              (48, 128, 2048, 768), mesh)
     assert sp[2] == "data"      # largest unsharded dim gets the data axis

@@ -1,0 +1,40 @@
+"""Distributed stage: sharded-vs-single-device COPML wall time.
+
+Multiple devices require XLA_FLAGS=--xla_force_host_platform_device_count
+to be set BEFORE jax initializes, so the measurement runs in a fresh
+subprocess (launch/copml_dist.py --bench) and its CSV rows are relayed to
+the harness.  On one CPU host the virtual devices share physical cores:
+the numbers record collective/protocol overhead (and any XLA thread-level
+parallelism), not real multi-chip scaling -- see docs/ARCHITECTURE.md,
+"Modeled vs measured communication".
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+DEVICES = 8
+
+
+def run(report) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={DEVICES} "
+                        + env.get("REPRO_EXTRA_XLA_FLAGS", ""))
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.copml_dist", "--bench",
+         "--devices", str(DEVICES), "--clients", "16", "--iters", "5",
+         "--m", "832", "--d", "64"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"copml_dist --bench failed:\n{out.stderr[-2000:]}")
+    seen = 0
+    for line in out.stdout.splitlines():
+        if line.startswith("copml_dist/"):
+            name, us, derived = line.split(",", 2)
+            report(name, float(us), derived)
+            seen += 1
+    assert seen >= 2, f"expected bench rows, got stdout:\n{out.stdout[-800:]}"

@@ -2,8 +2,13 @@
 
 Two layers of evidence:
   1. MEASURED: wall-clock per-iteration time of the real protocol
-     implementations at a reduced scale (all N clients simulated on this
-     host, so measured time ~ N * per-client compute; communication excluded).
+     implementations at a reduced scale.  This stage times the
+     single-process engines (all N clients on one device, so time ~ N *
+     per-client compute with no wire traffic); the `distributed` stage
+     (benchmarks/distributed_bench.py) times the mesh-sharded engine whose
+     exchanges ARE real collectives (all_to_all / reduce-scatter /
+     all_gather) over virtual devices -- see docs/ARCHITECTURE.md,
+     "Modeled vs measured communication", for why neither is a WAN number.
   2. MODELED: the validated Table-II cost model, priced with the paper's
      EC2/WAN parameters (40 Mbps) and this host's measured field MAC/s, at
      the paper's full scale (CIFAR-10 m=9019 d=3073, GISETTE m=6000 d=5000,

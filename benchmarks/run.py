@@ -15,8 +15,8 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: kernel,engine,fig3,fig4,"
-                         "table1,table2,roofline")
+                    help="comma-separated subset: kernel,engine,distributed,"
+                         "fig3,fig4,table1,table2,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,11 +40,13 @@ def main(argv=None) -> None:
             traceback.print_exc()
             return None
 
-    from . import (fig3_speedup, fig4_accuracy, kernel_micro,
-                   roofline_report, table1_breakdown, table2_complexity)
+    from . import (distributed_bench, fig3_speedup, fig4_accuracy,
+                   kernel_micro, roofline_report, table1_breakdown,
+                   table2_complexity)
 
     macs = stage("kernel", lambda: kernel_micro.run(report))
     stage("engine", lambda: kernel_micro.run_engine(report))
+    stage("distributed", lambda: distributed_bench.run(report))
     stage("fig4", lambda: fig4_accuracy.run(report))
     stage("fig3", lambda: fig3_speedup.run(report, macs))
     stage("table1", lambda: table1_breakdown.run(report, macs))

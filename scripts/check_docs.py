@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Docs lint: keep README/ARCHITECTURE honest as the codebase grows.
+
+Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
+
+1. every package under src/repro/ is mentioned in README.md or
+   docs/ARCHITECTURE.md (a new subsystem must at least be named);
+2. every relative markdown link in README.md and docs/*.md resolves to an
+   existing file (anchors are checked for same-file heading existence);
+3. the commands shown in README's Verify section reference real files.
+
+Exit code 0 = clean; 1 = problems (each printed on its own line).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(ROOT, "docs"))
+    if f.endswith(".md"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor: lowercase, strip punctuation, spaces->dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def check_packages(doc_text: str) -> list:
+    """Every src/repro/* package directory must be named in the docs."""
+    problems = []
+    pkg_root = os.path.join(ROOT, "src", "repro")
+    for name in sorted(os.listdir(pkg_root)):
+        path = os.path.join(pkg_root, name)
+        if not os.path.isdir(path) or name.startswith("__"):
+            continue
+        if not any(os.path.splitext(f)[1] == ".py" for f in os.listdir(path)):
+            continue
+        if f"repro/{name}" not in doc_text and f"`{name}/" not in doc_text \
+                and f"src/repro/{name}" not in doc_text:
+            problems.append(
+                f"package src/repro/{name} is not mentioned in README.md or "
+                f"docs/ARCHITECTURE.md")
+    return problems
+
+
+def check_links() -> list:
+    problems = []
+    for rel in DOC_FILES:
+        path = os.path.join(ROOT, rel)
+        with open(path) as f:
+            text = f.read()
+        headings = {_anchor(h) for h in _HEADING.findall(text)}
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, frag = target.partition("#")
+            if not file_part:                      # same-file anchor
+                if frag and _anchor(frag) not in headings:
+                    problems.append(f"{rel}: broken anchor #{frag}")
+                continue
+            resolved = os.path.normpath(
+                os.path.join(ROOT, os.path.dirname(rel), file_part))
+            if not os.path.exists(resolved):
+                problems.append(f"{rel}: broken link {target}")
+            elif frag and resolved.endswith(".md"):
+                with open(resolved) as f:
+                    t_head = {_anchor(h) for h in _HEADING.findall(f.read())}
+                if _anchor(frag) not in t_head:
+                    problems.append(f"{rel}: broken anchor {target}")
+    return problems
+
+
+def check_commands() -> list:
+    problems = []
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    for needed in ("examples/quickstart.py", "scripts/check_docs.py",
+                   "benchmarks"):
+        if needed in readme and not os.path.exists(
+                os.path.join(ROOT, needed)):
+            problems.append(f"README.md references missing path {needed}")
+    return problems
+
+
+def main() -> int:
+    doc_text = ""
+    for rel in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
+        path = os.path.join(ROOT, rel)
+        if not os.path.exists(path):
+            print(f"missing required doc: {rel}")
+            return 1
+        with open(path) as f:
+            doc_text += f.read()
+    problems = check_packages(doc_text) + check_links() + check_commands()
+    for p in problems:
+        print(p)
+    if not problems:
+        print(f"docs lint clean: {len(DOC_FILES)} files, all src/repro "
+              f"packages documented, all relative links resolve")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

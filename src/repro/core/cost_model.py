@@ -4,6 +4,15 @@ Used by benchmarks/fig3_speedup.py to reproduce the paper's Fig. 3 / Table I
 on the EC2-like WAN parameters (40 Mbps, m3.xlarge) and by the roofline
 analysis to price the COPML collective traffic on TPU ICI.
 
+These are MODELED wire costs.  The implementation's measured counterpart
+exists at two levels: the single-process engines exchange nothing (all N
+clients share one device), while Copml.train_sharded runs the same element
+counts as real mesh collectives (all_to_all for share distribution,
+reduce-scatter for encode reconstruction, all_gather for openings) --
+benchmarks/run.py --only distributed records its wall time on virtual
+devices.  The modeled-vs-measured caveat is spelled out in
+docs/ARCHITECTURE.md ("Modeled vs measured communication").
+
 All counts are per-client, per the paper's Section V-C accounting, in field
 elements (multiply by ~bytes_per_elem for bytes; the paper's 64-bit impl
 ships 8 B/elem, our int32 impl ships 4 B/elem).

@@ -1,8 +1,26 @@
-"""Mesh-aware sharding constraint helper, usable from any layer."""
+"""Mesh-aware sharding helpers, usable from any layer.
+
+Two families live here:
+
+* GSPMD annotation (`maybe_constrain`): soft sharding hints that XLA may
+  honor; the same code runs unsharded on a laptop.
+* The explicit client mesh (`client_mesh`, `psum_scatter_mod`,
+  `all_gather_clients`, `all_to_all_clients`): the shard_map substrate of the
+  distributed COPML engine (protocol.Copml.train_sharded), where the client
+  axis of every share array is physically split over a 1-D ("clients",) mesh
+  and the protocol's EXCHANGE/OPEN steps are real collectives.
+
+The mod-p reductions exploit that field elements are canonical in [0, p):
+a raw int32 psum of D partial sums stays below D * p < 2^31 for D <= 31,
+so one fold26 after the collective restores the canonical representative --
+bit-identical to computing the same contraction on one device.
+"""
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 def make_mesh(shape, axes):
@@ -68,4 +86,65 @@ def maybe_constrain(x, *spec):
     return jax.lax.with_sharding_constraint(x, P(*fixed))
 
 
-CLIENTS = ("pod", "data", "model")   # the COPML client axis spans the mesh
+CLIENTS = ("clients", "pod", "data", "model")   # COPML client axis spans the mesh
+
+# name of the 1-D mesh axis the distributed engine shards clients over
+CLIENT_AXIS = "clients"
+
+# raw int32 psum of canonical field elements must not wrap: D * (p-1) < 2^31.
+# Wider meshes switch to the two-limb reduction (see _reduce_mod), exact for
+# any realistic shard count.
+NARROW_SHARDS = 31
+
+
+def client_mesh(n_devices: int | None = None, devices=None):
+    """1-D ("clients",) mesh over (a prefix of) the host's devices.
+
+    This is the mesh Copml.train_sharded runs on; on a CPU host expose
+    multiple devices with XLA_FLAGS=--xla_force_host_platform_device_count=8
+    (set BEFORE the first jax import).  Unlike make_mesh this accepts a
+    device subset, so one 8-device process can build 4- and 8-way meshes.
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if n_devices is not None:
+        assert n_devices <= len(devs), (n_devices, len(devs))
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.array(devs), (CLIENT_AXIS,))
+
+
+def _reduce_mod(x, nshards, reducer):
+    """Exact mod-p cross-shard reduction of canonical field elements.
+
+    nshards <= NARROW_SHARDS: one raw int32 reduction (sum < D*p < 2^31),
+    one fold26.  Wider: reduce the 13-bit halves separately (sums < D*2^13,
+    safe to D = 2^17) and recombine with field ops -- two collectives, still
+    the same canonical value because everything is mod-p linear.
+    """
+    from . import field
+    if nshards <= NARROW_SHARDS:
+        return field.fold26(reducer(x))
+    lo = jnp.bitwise_and(x, (1 << 13) - 1)
+    hi = jax.lax.shift_right_logical(x, 13)
+    return field.add(field.mul_scalar(field.fold26(reducer(hi)), 1 << 13),
+                     field.fold26(reducer(lo)))
+
+
+def psum_scatter_mod(x, axis_name: str = CLIENT_AXIS,
+                     nshards: int | None = None):
+    """Mod-p reduce-scatter over the leading axis (must divide evenly)."""
+    return _reduce_mod(x, nshards or NARROW_SHARDS + 1,
+                       lambda v: jax.lax.psum_scatter(
+                           v, axis_name, scatter_dimension=0, tiled=True))
+
+
+def all_gather_clients(x, axis_name: str = CLIENT_AXIS):
+    """Concatenate every shard's leading axis in device order (OPEN step)."""
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+def all_to_all_clients(x, axis_name: str = CLIENT_AXIS):
+    """Owner<->holder transpose (EXCHANGE step): split the leading (holder)
+    axis across shards, concatenate the received blocks on axis 1 (owner).
+    (n_pad, n_loc, ...) per shard -> (n_loc, n_pad, ...) per shard."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=1,
+                              tiled=True)

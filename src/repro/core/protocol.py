@@ -29,6 +29,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from . import field, lagrange, meshutil, mpc, quantize, shamir, sigmoid_approx, truncation
 
@@ -251,16 +253,10 @@ class Copml:
         # section Perf, COPML cell, iteration 1).
         per_holder = meshutil.maybe_constrain(
             jnp.swapaxes(f_shares, 0, 1), meshutil.CLIENTS)
-        # (N_holder, N_owner, d); each holder decodes from its R rows
-        sub_alphas = [self.alphas[i] for i in subset]
-        dmat = jnp.asarray(lagrange.decode_matrix(
-            sub_alphas, self.betas[: cfg.k]))                     # (K, R)
+        # (N_holder, N_owner, d); each holder decodes from its R rows.
         # sum over K commutes with the decode matmul: fold it into ONE
         # matvec row  (sum_k D[k, :]) @ evals  -- K x less local work
-        dsum = dmat.reshape(1, cfg.k, -1)
-        dvec = dsum[0, 0]
-        for kk in range(1, cfg.k):
-            dvec = field.add(dvec, dsum[0, kk])                  # (R,)
+        dvec = jnp.asarray(self._decode_vec(subset))             # (R,)
         evals = per_holder[:, jnp.asarray(subset), :]            # (N_h, R, d)
         xtg_shares = jax.vmap(
             lambda e: field.matmul(dvec[None], e)[0])(evals)     # (N, d)
@@ -272,6 +268,15 @@ class Copml:
             kt, scaled, self.k1, self.k2, cfg.t, self.lambdas)   # scale lw
         new_w = field.sub(state.w_shares, delta_shares)
         return dataclasses.replace(state, w_shares=new_w, step=state.step + 1)
+
+    def _decode_vec(self, subset) -> np.ndarray:
+        """Host-side (R,) decode row: sum_k D[k, :] over the K decode-matrix
+        rows, mod p.  Shared by the single-device and sharded engines so both
+        trace the exact same public constant."""
+        sub_alphas = [self.alphas[i] for i in subset]
+        dmat = lagrange.decode_matrix(
+            sub_alphas, self.betas[: self.cfg.k]).astype(np.int64)  # (K, R)
+        return (dmat.sum(axis=0) % field.P).astype(np.int32)
 
     def iteration(self, key, state: CopmlState,
                   subset: Sequence[int] | None = None) -> CopmlState:
@@ -352,6 +357,206 @@ class Copml:
         for evaluation; during training clients hold only shares)."""
         w_field = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
         return quantize.dequantize(w_field, self.cfg.lw)
+
+    # ----------------------------------------------------- distributed engine
+
+    def train_sharded(self, key, client_xs, client_ys, iters: int,
+                      mesh=None, subset: Sequence[int] | None = None,
+                      history: bool = False) -> tuple:
+        """train_jit with the client axis PHYSICALLY sharded over a mesh.
+
+        Every share/coded array is split over a 1-D ("clients",) mesh
+        (meshutil.client_mesh) with shard_map, so each device holds only its
+        clients' state, and each protocol step lowers to the collective its
+        MPC character implies:
+
+          LOCAL     Phase-3 coded gradients, share-level add/mul-by-public
+                    -> per-shard compute, zero communication
+          EXCHANGE  share_batch's owner->holder share distribution
+                    -> all_to_all; model-encoding reconstruct
+                    -> mod-p reduce-scatter (psum_scatter_mod)
+          OPEN      TruncPr's masked opening, per-step model opening
+                    -> all_gather + replicated decode
+
+        Bit-exact against train_jit: the per-step key schedule is identical,
+        every random draw is replicated (same key, same shape on all shards
+        -- equivalent to the paper's offline dealer, fn. 3), and the only
+        cross-shard contractions are mod-p linear reductions whose shard
+        partials recombine to the same canonical representative (see
+        meshutil.psum_scatter_mod).  N need not divide the mesh: the client
+        axis is
+        zero-padded to a multiple of the shard count and padded clients are
+        excluded from every reconstruction (zero Lagrange weight).
+
+        Returns (state, w) or (state, w, history) exactly like train_jit,
+        with state.w_shares materialized back to the un-padded (N, d) view.
+        """
+        mesh = meshutil.client_mesh() if mesh is None else mesh
+        assert tuple(mesh.axis_names) == (meshutil.CLIENT_AXIS,), (
+            f"train_sharded needs a 1-D ('{meshutil.CLIENT_AXIS}',) mesh, "
+            f"got {mesh.axis_names}")
+        n = self.cfg.n_clients
+        ks, ki = jax.random.split(key)
+        state = self.setup(ks, client_xs, client_ys)    # one-time, replicated
+        subset = None if subset is None else tuple(subset)
+        fn, n_pad = self._sharded_scan(mesh, int(iters), subset, bool(history))
+        out = fn(_pad_clients(state.w_shares, n_pad),
+                 _pad_clients(state.coded_x, n_pad),
+                 _pad_clients(state.xty_shares, n_pad), ki)
+        w_pad, hist = out if history else (out, None)
+        state = dataclasses.replace(
+            state, w_shares=w_pad[:n],
+            step=state.step + jnp.asarray(iters, jnp.int32))
+        w = self.open_model(state)
+        return (state, w, hist) if history else (state, w)
+
+    def sharded_step(self, mesh, subset: Sequence[int] | None = None):
+        """One sharded GD iteration as a jit-able fn(w, coded_x, xty, key)
+        over PADDED (n_pad, ...) client-sharded arrays; returns (fn, n_pad).
+        Used by launch/copml_dist.dryrun_cell to compile the real collective
+        program and by the distributed benchmark stage."""
+        subset = None if subset is None else tuple(subset)
+        return self._sharded_scan(mesh, 1, subset, False)
+
+    def _sharded_scan(self, mesh, iters: int, subset, history: bool):
+        """Build (and cache per instance) the jitted shard_map scan."""
+        cache = self.__dict__.setdefault("_sharded_cache", {})
+        ckey = (mesh, iters, subset, history)
+        if ckey in cache:
+            return cache[ckey]
+
+        cfg, n, d = self.cfg, self.cfg.n_clients, self.d
+        assert cfg.t >= 1, "sharded engine assumes T >= 1 (as all paper cases)"
+        ndev = mesh.shape[meshutil.CLIENT_AXIS]
+        n_loc = -(-n // ndev)
+        n_pad = n_loc * ndev
+        t_, kk = cfg.t, cfg.k
+        axis = meshutil.CLIENT_AXIS
+
+        # public per-client constants, zero-padded so padded clients carry
+        # zero Lagrange weight and a zero sharing polynomial
+        pmat = np.zeros((n_pad, t_), np.int32)
+        pmat[:n] = shamir._power_matrix(tuple(self.lambdas), t_)
+        wall = np.zeros((n_pad,), np.int32)
+        wall[:n] = shamir._recon_matrix(tuple(self.lambdas))[0]
+        sub = tuple(range(cfg.recovery_threshold)) if subset is None \
+            else tuple(subset)[: cfg.recovery_threshold]
+        dvec = jnp.asarray(self._decode_vec(sub))                # (R,)
+        sub_arr = jnp.asarray(sub)
+
+        def share_rows(keyc, secret, pmat_loc):
+            """This shard's holder rows of shamir.share(keyc, secret, t, n):
+            the coefficient draw is replicated (same key on every shard --
+            the offline dealer), only the public power-matrix rows are
+            shard-local, so per-row values match the global share bits."""
+            coeffs = field.random_field(keyc, (t_,) + secret.shape)
+            mix = field.matmul(pmat_loc, coeffs.reshape(t_, -1))
+            return field.add(
+                mix.reshape((pmat_loc.shape[0],) + secret.shape), secret[None])
+
+        def encode_model(k1_, w_loc, pmat_loc, wall_loc):
+            """Phase-2 per-iteration model encoding, holder-sharded."""
+            kv, ks_ = jax.random.split(k1_)
+            v = field.random_field(kv, (t_, d))
+            v_sh = share_rows(ks_, v, pmat_loc)                  # (n_loc,T,d)
+            blocks = jnp.broadcast_to(w_loc[:, None],
+                                      (w_loc.shape[0], kk, d))
+            enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
+                b[:, None, :], vv[:, None, :], self.alphas, self.betas
+            )[:, 0, :])(blocks, v_sh)                            # (n_loc,N,d)
+            # EXCHANGE: reconstruct from ALL holders -- local weighted
+            # partial, then a mod-p reduce-scatter hands each shard its own
+            # clients' coded model rows
+            part = field.matmul(wall_loc[None, :],
+                                enc.reshape(enc.shape[0], -1)).reshape(n, d)
+            if n_pad > n:
+                part = jnp.concatenate(
+                    [part, jnp.zeros((n_pad - n, d), jnp.int32)], axis=0)
+            return meshutil.psum_scatter_mod(part, axis, ndev)   # (n_loc, d)
+
+        def trunc(kt, a_loc, pmat_loc):
+            """TruncPr (truncation.trunc_pr_core) with shard-local share
+            rows and the masked value OPENed via all_gather."""
+            def open_(c_sh):
+                c_full = meshutil.all_gather_clients(c_sh, axis)[:n]
+                return shamir.reconstruct(c_full, t_, self.lambdas)
+
+            return truncation.trunc_pr_core(
+                kt, a_loc, self.k1, self.k2,
+                share=lambda kc, s: share_rows(kc, s, pmat_loc),
+                open_=open_)
+
+        def decode_update(k2_, w_loc, xty_loc, f_loc, pmat_loc, pmat_all,
+                          shard_ix):
+            """Phase 4, owner->holder exchange as a real all_to_all."""
+            kf, kt = jax.random.split(k2_)
+            # EXCHANGE: share_batch.  The sharing-polynomial draw spans ALL
+            # owners (replicated dealer randomness, matching the global
+            # (T, N, d) draw bit-for-bit); each shard keeps its own owners'
+            # columns and deals shares to every holder.
+            coeffs = field.random_field(kf, (t_, n, d))
+            if n_pad > n:
+                coeffs = jnp.concatenate(
+                    [coeffs, jnp.zeros((t_, n_pad - n, d), jnp.int32)],
+                    axis=1)
+            cl = jax.lax.dynamic_slice_in_dim(
+                coeffs, shard_ix * n_loc, n_loc, axis=1)         # (T,n_loc,d)
+            mix = field.matmul(pmat_all, cl.reshape(t_, -1))
+            mine = field.add(mix.reshape(n_pad, n_loc, d),
+                             f_loc[None])          # (N_holder, n_loc_own, d)
+            per_holder = meshutil.all_to_all_clients(mine, axis)
+            # (n_loc_holder, N_owner, d): decode LOCALLY per holder
+            evals = per_holder[:, sub_arr, :]                    # (n_loc,R,d)
+            xtg = jax.vmap(
+                lambda e: field.matmul(dvec[None], e)[0])(evals)
+            grad = field.sub(xtg, xty_loc)
+            scaled = field.mul_scalar(grad, self.q_eta)
+            delta = trunc(kt, scaled, pmat_loc)
+            return field.sub(w_loc, delta)
+
+        def open_w(w_loc):
+            w_full = meshutil.all_gather_clients(w_loc, axis)[:n]
+            wf = shamir.reconstruct(w_full, t_, self.lambdas)
+            return quantize.dequantize(wf, cfg.lw)
+
+        def loop(w, coded_x, xty, pmat_loc, wall_loc, key):
+            shard_ix = jax.lax.axis_index(axis)
+            pmat_all = jnp.asarray(pmat)          # replicated full power mat
+
+            def body(w_c, tstep):
+                kit = jax.random.fold_in(key, tstep)
+                k1_, k2_ = jax.random.split(kit)
+                coded_w = encode_model(k1_, w_c, pmat_loc, wall_loc)
+                f_loc = self.local_gradient(coded_x, coded_w)    # LOCAL
+                w_n = decode_update(k2_, w_c, xty, f_loc, pmat_loc, pmat_all,
+                                    shard_ix)
+                return w_n, (open_w(w_n) if history else None)
+
+            w_f, hist = jax.lax.scan(body, w, jnp.arange(iters))
+            return (w_f, hist) if history else w_f
+
+        cl = P(axis)
+        out_specs = (cl, P()) if history else cl
+        sm = shard_map(loop, mesh,
+                       in_specs=(cl, cl, cl, cl, cl, P()),
+                       out_specs=out_specs, check_rep=False)
+        jfn = jax.jit(sm)
+        pmat_j, wall_j = jnp.asarray(pmat), jnp.asarray(wall)
+
+        def call(w, coded_x, xty, key):
+            return jfn(w, coded_x, xty, pmat_j, wall_j, key)
+
+        cache[ckey] = (call, n_pad)
+        return cache[ckey]
+
+
+def _pad_clients(arr, n_pad: int):
+    """Zero-pad the leading client axis to n_pad rows (mesh divisibility)."""
+    n = arr.shape[0]
+    if n == n_pad:
+        return arr
+    pad = jnp.zeros((n_pad - n,) + arr.shape[1:], arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
 
 
 @partial(jax.jit, static_argnames=("proto", "iters", "subset", "history"))

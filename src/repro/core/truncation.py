@@ -27,28 +27,32 @@ import jax.numpy as jnp
 from . import field, shamir
 
 
-def trunc_pr(key, a_shares, k1: int, k2: int, t: int, points=None):
-    """Probabilistic truncation of shared fixed-point values by 2^{k1}.
+def trunc_pr_core(key, a_shares, k1: int, k2: int, share, open_):
+    """TruncPr's arithmetic, parameterized over the share/open primitives.
 
-    a_shares: (N, ...) Shamir shares.  Returns (N, ...) shares of
+    `share(key, secret)` deals Shamir shares of the offline randomness and
+    `open_(c_shares)` publicly reconstructs the masked value.  The
+    single-device path (trunc_pr below) passes the plain shamir ops; the
+    mesh-sharded engine (protocol.Copml._sharded_scan) passes its local-row
+    share and all_gather-backed open -- ONE source of truth for the bias /
+    mask / borrow-fold math, so the two engines cannot drift.
+
+    a_shares: (N_local_or_global, ...) shares.  Returns shares of
     floor(a/2^{k1}) + Bernoulli((a mod 2^{k1})/2^{k1}).
     """
     assert 0 < k1 < k2 < field.P_BITS
-    n = a_shares.shape[0]
-    if points is None:
-        points = shamir.default_eval_points(n)
     shape = a_shares.shape[1:]
     kr, ks1, ks2 = jax.random.split(key, 3)
     # offline correlated randomness (crypto-service provider / PRSS, fn. 3)
     r = jax.random.randint(kr, shape, 0, 1 << k2, dtype=jnp.int32)
     r0 = jnp.bitwise_and(r, (1 << k1) - 1)
-    r_sh = shamir.share(ks1, r.astype(field.FIELD_DTYPE), t, n, points)
-    r0_sh = shamir.share(ks2, r0.astype(field.FIELD_DTYPE), t, n, points)
+    r_sh = share(ks1, r.astype(field.FIELD_DTYPE))
+    r0_sh = share(ks2, r0.astype(field.FIELD_DTYPE))
 
     # online: open c = a + 2^{k2-1} + r  (bias makes the value positive)
     bias = 1 << (k2 - 1)
     c_sh = field.add(a_shares, field.add(r_sh, jnp.full_like(a_shares, bias)))
-    c = shamir.reconstruct(c_sh, t, points)
+    c = open_(c_sh)
     c0 = jnp.bitwise_and(c, (1 << k1) - 1)
 
     # [a0] = c0 - [r0]  (+2^{k1} borrow, folded into the stochastic offset)
@@ -57,6 +61,21 @@ def trunc_pr(key, a_shares, k1: int, k2: int, t: int, points=None):
     num = field.sub(a_shares, a0_sh)
     inv_2k1 = field.host_inv(1 << k1)
     return field.mul_scalar(num, inv_2k1)
+
+
+def trunc_pr(key, a_shares, k1: int, k2: int, t: int, points=None):
+    """Probabilistic truncation of shared fixed-point values by 2^{k1}.
+
+    a_shares: (N, ...) Shamir shares.  Returns (N, ...) shares of
+    floor(a/2^{k1}) + Bernoulli((a mod 2^{k1})/2^{k1}).
+    """
+    n = a_shares.shape[0]
+    if points is None:
+        points = shamir.default_eval_points(n)
+    return trunc_pr_core(
+        key, a_shares, k1, k2,
+        share=lambda k, s: shamir.share(k, s, t, n, points),
+        open_=lambda c_sh: shamir.reconstruct(c_sh, t, points))
 
 
 def statistical_gap(k2: int) -> float:

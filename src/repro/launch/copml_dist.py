@@ -1,40 +1,56 @@
-"""COPML on the production mesh: one client per device.
+"""COPML on a real device mesh: the distributed protocol entry point.
 
-The paper's N clients map onto the flattened mesh (DESIGN.md section 3.1):
-every share/coded array carries the client axis first, sharded over ALL mesh
-axes, so each device holds exactly what a real client would hold.  The
-protocol's exchanges lower to collectives under GSPMD:
+The paper's N clients map onto a 1-D ("clients",) mesh (each device holds a
+contiguous block of clients' shares and coded slices) and the protocol runs
+under shard_map (core/protocol.py, Copml.train_sharded), so every exchange
+is an explicit collective rather than a GSPMD annotation:
 
-  share distribution (owner, holder) transpose  -> all-to-all
-  reconstruction (matmul over the client axis)  -> reduce-scatter/all-reduce
-  share-of-sum aggregation                      -> all-reduce
+  share distribution (owner -> holder transpose)   -> all_to_all
+  model-encoding reconstruction (sum over holders) -> mod-p reduce-scatter
+  TruncPr / model opening                          -> all_gather + replicated
+                                                      decode
 
-Dry-run cells (invoked from launch/dryrun.py for --arch copml-logreg):
-shape names map to paper-scale and pod-scale workloads:
+Run it for real on a CPU host (flag must precede the first jax import):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.copml_dist --devices 8 --clients 13 --iters 5
+
+which trains sharded, re-trains on one device with train_jit, and asserts
+the two are bit-exact.  --bench prints the CSV rows benchmarks/run.py's
+`distributed` stage records.
+
+Dry-run cells (invoked from launch/dryrun.py for --arch copml-logreg) lower
+and compile ONE real sharded iteration -- collectives and all -- on the
+flattened production mesh; shape names map to paper-scale and pod-scale
+workloads:
 
   train_4k    -> CIFAR-10 scale (m=9019, d=3073), paper Case 2 at N=mesh size
   prefill_32k -> GISETTE scale (m=6000, d=5000)
   decode_32k  -> pod-scale (m=262144, d=4096)
+  smoke       -> tiny (m=416, d=64), used by tests/test_distributed.py
   long_500k   -> skipped (no analogue; noted in DESIGN.md)
 """
 
 from __future__ import annotations
 
-import functools
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import field, meshutil
+from ..core import meshutil
 from ..core.protocol import Copml, CopmlConfig, CopmlState, case2_params
+from ..sharding import partition
 from . import roofline as RL
 
 _SHAPE_MAP = {
     "train_4k": ("cifar10-scale", 9019, 3073),
     "prefill_32k": ("gisette-scale", 6000, 5000),
     "decode_32k": ("pod-scale", 262144, 4096),
+    "smoke": ("smoke-scale", 416, 64),
 }
 
 # field MACs per train iteration (Table II, matvec-chain evaluation):
@@ -56,26 +72,22 @@ def make_protocol(n: int, m: int, d: int) -> Copml:
     return Copml(cfg, m, d)
 
 
-def client_sharding(mesh):
-    """Client axis over every mesh axis: one client per device."""
-    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+def flatten_mesh(mesh):
+    """Any production mesh -> the 1-D ("clients",) mesh of the same devices."""
+    if tuple(mesh.axis_names) == (meshutil.CLIENT_AXIS,):
+        return mesh
+    return meshutil.client_mesh(devices=list(mesh.devices.reshape(-1)))
 
 
-def state_structs(proto: Copml, mesh):
-    n, d = proto.cfg.n_clients, proto.d
-    mk = -(-proto.m // proto.cfg.k)
-    cl = client_sharding(mesh)
-    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32, sharding=cl)
-    return CopmlState(
-        w_shares=sds((n, d)),
-        coded_x=sds((n, mk, d)),
-        xty_shares=sds((n, d)),
-        step=jax.ShapeDtypeStruct((), jnp.int32,
-                                  sharding=NamedSharding(mesh, P())),
-    )
+def state_structs(proto: Copml, mesh) -> CopmlState:
+    """Abstract padded client-sharded CopmlState; the client NamedSharding
+    is built in ONE place, sharding/partition.copml_state_structs."""
+    return partition.copml_state_structs(proto, mesh)
 
 
 def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
+    """Compile one REAL sharded iteration (shard_map + collectives) for the
+    given mesh and report per-device memory + roofline, no data needed."""
     if shape_name not in _SHAPE_MAP:
         return {"arch": "copml-logreg", "shape": shape_name,
                 "mesh": "multipod" if multi_pod else "pod",
@@ -83,14 +95,16 @@ def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
                           "logistic regression)"}
     tag, m, d = _SHAPE_MAP[shape_name]
     n = mesh.size
+    cmesh = flatten_mesh(mesh)
     proto = make_protocol(n, m, d)
     cfg = proto.cfg
-    state = state_structs(proto, mesh)
+    step_fn, _ = proto.sharded_step(cmesh)
+    state = state_structs(proto, cmesh)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32,
-                               sharding=NamedSharding(mesh, P()))
-    with meshutil.set_mesh(mesh):
-        lowered = jax.jit(proto.iteration).lower(key, state)
-        compiled = lowered.compile()
+                               sharding=NamedSharding(cmesh, P()))
+    lowered = jax.jit(step_fn).lower(state.w_shares, state.coded_x,
+                                     state.xty_shares, key)
+    compiled = lowered.compile()
     mem = compiled.memory_analysis()
     mk = -(-m // cfg.k)
     macs = (d * n * (cfg.k + cfg.t)            # encode w
@@ -105,6 +119,7 @@ def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
         "mesh": "multipod" if multi_pod else "pod", "status": "ok",
         "n_clients": n, "K": cfg.k, "T": cfg.t,
         "recovery_threshold": cfg.recovery_threshold,
+        "collectives": RL.collective_bytes(compiled.as_text())["counts"],
         "bytes_per_device": {
             "argument": mem.argument_size_in_bytes,
             "output": mem.output_size_in_bytes,
@@ -117,7 +132,101 @@ def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
           f" N={n} K={cfg.k} T={cfg.t} R={cfg.recovery_threshold} ---")
     print(f"memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
           f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB")
+    print(f"collectives: {rec['collectives']}")
     print(f"roofline: compute={rf.compute_s*1e3:.3f}ms "
           f"memory={rf.memory_s*1e3:.3f}ms "
           f"collective={rf.collective_s*1e3:.3f}ms dominant={rf.dominant}")
     return rec
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def _workload(args):
+    from ..data import pipeline
+    x, y = pipeline.classification_dataset(m=args.m, d=args.d, seed=0,
+                                           margin=2.0)
+    proto = make_protocol(args.clients, args.m, args.d)
+    cx, cy = pipeline.split_clients(x, y, args.clients)
+    return proto, cx, cy
+
+
+def run_parity(args) -> None:
+    """Train sharded on the client mesh, re-train single-device, compare."""
+    proto, cx, cy = _workload(args)
+    cfg = proto.cfg
+    mesh = meshutil.client_mesh(args.devices)
+    print(f"COPML distributed: N={cfg.n_clients} clients over "
+          f"{mesh.size} devices, K={cfg.k} T={cfg.t} "
+          f"R={cfg.recovery_threshold}, {args.iters} iterations")
+    key = jax.random.PRNGKey(args.seed)
+    t0 = time.perf_counter()
+    st_s, w_s = proto.train_sharded(key, cx, cy, args.iters, mesh=mesh)
+    jax.block_until_ready(w_s)
+    dt_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    st_j, w_j = proto.train_jit(key, cx, cy, args.iters)
+    jax.block_until_ready(w_j)
+    dt_j = time.perf_counter() - t0
+    np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w_j))
+    np.testing.assert_array_equal(np.asarray(st_s.w_shares),
+                                  np.asarray(st_j.w_shares))
+    print(f"bit-exact: sharded == train_jit  "
+          f"(sharded {dt_s:.2f}s incl. compile, single {dt_j:.2f}s)")
+
+
+def run_bench(args, report=print) -> None:
+    """Sharded-vs-single-device wall time, interleaved best-of-reps
+    (both warm; virtual CPU devices share the host's cores, so this
+    measures protocol+collective overhead, not real multi-chip scaling)."""
+    proto, cx, cy = _workload(args)
+    mesh = meshutil.client_mesh(args.devices)
+    key = jax.random.PRNGKey(args.seed)
+    runners = (
+        ("train_jit_1dev", lambda: proto.train_jit(key, cx, cy, args.iters)),
+        (f"train_sharded_{mesh.size}dev",
+         lambda: proto.train_sharded(key, cx, cy, args.iters, mesh=mesh)),
+    )
+    best = {}
+    for name, fn in runners:                    # compile + warm
+        jax.block_until_ready(fn()[1])
+        best[name] = float("inf")
+    for _ in range(args.reps):                  # interleaved best-of-reps
+        for name, fn in runners:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn()[1])
+            best[name] = min(best[name], time.perf_counter() - t0)
+    base = best[runners[0][0]]
+    for name, _ in runners:
+        dt = best[name]
+        report(f"copml_dist/{name}_{args.iters}it,{dt * 1e6:.1f},"
+               f"{base / dt:.2f}x_vs_1dev")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size (default: all visible devices)")
+    ap.add_argument("--clients", type=int, default=13)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--m", type=int, default=832)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bench", action="store_true",
+                    help="print benchmark CSV rows instead of the parity demo")
+    args = ap.parse_args(argv)
+    if args.devices is None:
+        args.devices = len(jax.devices())
+    if len(jax.devices()) < 2:
+        print("NOTE: only one device visible; set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "before launching to exercise real collectives.")
+    if args.bench:
+        run_bench(args)
+    else:
+        run_parity(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Partition rules: map model/optimizer/input pytrees onto the mesh.
 
-Axes: ("pod",) "data", "model".  Rules (DESIGN.md section 5):
+LM/serving axes: ("pod",) "data", "model"; the distributed COPML engine adds
+a 1-D "clients" axis (copml_state_structs below; docs/ARCHITECTURE.md maps
+each protocol phase onto its collective).  Rules (DESIGN.md section 5):
   * params: from the model's own param table (models/model.py)
   * optimizer state: derived per-leaf from the param spec (adafactor's
     factored stats drop the corresponding dim)
@@ -184,3 +186,25 @@ def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def copml_state_structs(proto, mesh: Mesh):
+    """Abstract CopmlState for the sharded COPML engine.
+
+    The client axis is zero-padded to a multiple of the mesh size and split
+    one block per device -- the exact input layout Copml.train_sharded /
+    Copml.sharded_step consume.  Used by launch/copml_dist.dryrun_cell to
+    lower the real collective program without materializing data.
+    """
+    from ..core.protocol import CopmlState
+    n, d = proto.cfg.n_clients, proto.d
+    n_pad = -(-n // mesh.size) * mesh.size
+    mk = -(-proto.m // proto.cfg.k)
+    cl = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32, sharding=cl)
+    return CopmlState(
+        w_shares=sds((n_pad, d)),
+        coded_x=sds((n_pad, mk, d)),
+        xty_shares=sds((n_pad, d)),
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=replicated(mesh)),
+    )

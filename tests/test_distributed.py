@@ -1,0 +1,135 @@
+"""Distributed COPML engine: train_sharded bit-exact vs train_jit.
+
+The real multi-device checks need XLA_FLAGS=--xla_force_host_platform_
+device_count set BEFORE jax initializes, which the in-process suite must
+not do (tests/conftest.py keeps the host's real device view), so they run
+in ONE fresh subprocess covering 4- and 8-device meshes, ragged and
+divisible client counts, case1/case2 parameterizations, straggler subsets,
+and the dryrun_cell smoke.  A 1-device-mesh parity test exercises the
+shard_map code path in-process on every host.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+
+from repro.core import meshutil
+from repro.core.protocol import Copml, CopmlConfig, case1_params, case2_params
+from repro.data import pipeline
+
+assert len(jax.devices()) == 8, jax.devices()
+
+
+def parity(tag, n, k, t, ndev, subset=None, history=False, iters=3):
+    x, y = pipeline.classification_dataset(m=78, d=6, seed=3, margin=2.0)
+    cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=1.0)
+    proto = Copml(cfg, x.shape[0], x.shape[1])
+    cx, cy = pipeline.split_clients(x, y, n)
+    key = jax.random.PRNGKey(5)
+    mesh = meshutil.client_mesh(ndev)
+    if history:
+        st_j, w_j, h_j = proto.train_jit(key, cx, cy, iters, subset=subset,
+                                         history=True)
+        st_s, w_s, h_s = proto.train_sharded(key, cx, cy, iters, mesh=mesh,
+                                             subset=subset, history=True)
+        np.testing.assert_array_equal(np.asarray(h_j), np.asarray(h_s))
+    else:
+        st_j, w_j = proto.train_jit(key, cx, cy, iters, subset=subset)
+        st_s, w_s = proto.train_sharded(key, cx, cy, iters, mesh=mesh,
+                                        subset=subset)
+    np.testing.assert_array_equal(np.asarray(w_j), np.asarray(w_s))
+    np.testing.assert_array_equal(np.asarray(st_j.w_shares),
+                                  np.asarray(st_s.w_shares))
+    assert int(st_s.step) == iters
+    print("PARITY", tag, flush=True)
+
+
+# ragged: 13 clients on 4 devices (case1, K=4 T=1), with per-step history
+k1, t1 = case1_params(13)
+parity("case1_n13_dev4_history", 13, k1, t1, 4, history=True)
+# ragged: 13 clients on 8 devices
+parity("case1_n13_dev8", 13, k1, t1, 8)
+# divisible: 16 clients, case2 (T=2) on 8 devices
+k2, t2 = case2_params(16)
+assert t2 == 2
+parity("case2_n16_dev8", 16, k2, t2, 8)
+# straggler subset: decode from the LAST R of N clients
+parity("subset_n13_dev4", 13, 3, 1, 4, subset=tuple(range(3, 13)))
+
+# dryrun_cell smoke: compile one real sharded iteration, check collectives
+from repro.launch import copml_dist
+rec = copml_dist.dryrun_cell("smoke", meshutil.client_mesh(4), False)
+assert rec["status"] == "ok", rec
+assert rec["n_clients"] == 4
+colls = rec["collectives"]
+assert colls["all-to-all"] >= 1 and colls["reduce-scatter"] >= 1 \
+    and colls["all-gather"] >= 1, colls
+assert "skipped" in copml_dist.dryrun_cell(
+    "long_500k", meshutil.client_mesh(4), False)["status"]
+print("DRYRUN OK", flush=True)
+print("ALL OK", flush=True)
+"""
+
+
+@pytest.mark.slow
+def test_train_sharded_bit_exact_subprocess():
+    """4/8 virtual devices: sharded == train_jit bit-for-bit (see module
+    docstring for the matrix), plus the dryrun_cell smoke."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True, env=env, cwd=_REPO,
+                         timeout=1500)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    for marker in ("PARITY case1_n13_dev4_history", "PARITY case1_n13_dev8",
+                   "PARITY case2_n16_dev8", "PARITY subset_n13_dev4",
+                   "DRYRUN OK", "ALL OK"):
+        assert marker in out.stdout, (marker, out.stdout[-2000:])
+
+
+def test_train_sharded_single_device_mesh():
+    """The shard_map engine on a trivial 1-device mesh (no XLA flags
+    needed): same collective program structure, bit-exact vs train_jit."""
+    import jax
+
+    from repro.core import meshutil
+    from repro.core.protocol import Copml, CopmlConfig, case1_params
+    from repro.data import pipeline
+
+    x, y = pipeline.classification_dataset(m=70, d=6, seed=4, margin=2.0)
+    n = 7
+    cfg = CopmlConfig(n_clients=n, k=2, t=1, eta=1.0)
+    proto = Copml(cfg, x.shape[0], x.shape[1])
+    cx, cy = pipeline.split_clients(x, y, n)
+    key = jax.random.PRNGKey(11)
+    st_j, w_j = proto.train_jit(key, cx, cy, iters=3)
+    st_s, w_s = proto.train_sharded(key, cx, cy, iters=3,
+                                    mesh=meshutil.client_mesh(1))
+    np.testing.assert_array_equal(np.asarray(w_j), np.asarray(w_s))
+    np.testing.assert_array_equal(np.asarray(st_j.w_shares),
+                                  np.asarray(st_s.w_shares))
+
+
+def test_client_mesh_and_padding_helpers():
+    from repro.core import meshutil
+    from repro.core.protocol import _pad_clients
+    import jax.numpy as jnp
+
+    mesh = meshutil.client_mesh(1)
+    assert tuple(mesh.axis_names) == (meshutil.CLIENT_AXIS,)
+    a = jnp.arange(6, dtype=jnp.int32).reshape(3, 2)
+    p = _pad_clients(a, 4)
+    assert p.shape == (4, 2)
+    np.testing.assert_array_equal(np.asarray(p[3]), np.zeros(2))
+    assert _pad_clients(a, 3) is a

@@ -1,0 +1,54 @@
+"""Docs lint as a fast-lane test: scripts/check_docs.py must pass, and its
+checks must actually catch regressions (negative tests on a tmp tree)."""
+
+import importlib.util
+import os
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name="check_docs"):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_REPO, "scripts", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_lint_clean():
+    assert _load().main() == 0
+
+
+def _fake_repo(tmp_path, readme_text):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text("# Arch\n")
+    pkg = tmp_path / "src" / "repro" / "mystery"
+    pkg.mkdir(parents=True)
+    (pkg / "thing.py").write_text("x = 1\n")
+    (tmp_path / "README.md").write_text(readme_text)
+    mod = _load("check_docs_tmp")
+    mod.ROOT = str(tmp_path)
+    mod.DOC_FILES = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
+    return mod
+
+
+def test_docs_lint_catches_unmentioned_package(tmp_path, capsys):
+    mod = _fake_repo(tmp_path, "# Repo\nnothing about the package\n")
+    assert mod.main() == 1
+    assert "src/repro/mystery" in capsys.readouterr().out
+
+
+def test_docs_lint_catches_broken_link(tmp_path, capsys):
+    mod = _fake_repo(
+        tmp_path,
+        "# Repo\n`repro/mystery`\n[gone](docs/NOPE.md)\n")
+    assert mod.main() == 1
+    assert "broken link" in capsys.readouterr().out
+
+
+def test_docs_lint_catches_broken_anchor(tmp_path, capsys):
+    mod = _fake_repo(
+        tmp_path,
+        "# Repo\n`repro/mystery`\n[anchor](docs/ARCHITECTURE.md#missing)\n")
+    assert mod.main() == 1
+    assert "broken anchor" in capsys.readouterr().out

@@ -35,6 +35,7 @@ def run(report) -> None:
     for line in out.stdout.splitlines():
         if line.startswith("copml_dist/"):
             name, us, derived = line.split(",", 2)
-            report(name, float(us), derived)
+            engine = f"sharded:{DEVICES}" if "sharded" in name else "jit"
+            report(name, float(us), derived, engine=engine)
             seen += 1
     assert seen >= 2, f"expected bench rows, got stdout:\n{out.stdout[-800:]}"

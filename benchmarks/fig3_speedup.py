@@ -79,5 +79,7 @@ def run(report, field_macs_per_s: float | None = None):
     jax.block_until_ready(mstate.w_shares)
     mpc_dt = (time.perf_counter() - t0) / 3
     report("fig3/measured_iter_copml", copml_dt * 1e6,
-           f"{mpc_dt / copml_dt:.1f}x_vs_bh08_compute_only")
-    report("fig3/measured_iter_bh08", mpc_dt * 1e6, "")
+           f"{mpc_dt / copml_dt:.1f}x_vs_bh08_compute_only",
+           workload="fig3_measured", engine="eager")
+    report("fig3/measured_iter_bh08", mpc_dt * 1e6, "",
+           workload="fig3_measured", protocol="mpc_baseline", engine="eager")

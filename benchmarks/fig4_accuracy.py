@@ -4,39 +4,26 @@ Real CIFAR-10/GISETTE are unavailable offline; we run the REAL protocol on
 synthetic binary tasks with the paper's aspect ratios at reduced m (CPU
 budget) and report the PARITY GAP, which is the quantity Fig. 4
 demonstrates (paper: 80.45% vs 81.75% on CIFAR-10; tie at 97.5% GISETTE).
+
+Both runs go through api.fit -- the comparison is two rows of the
+(workload, protocol, engine) grid, scored on the workload's held-out
+eval split.
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-import numpy as np
-
-from repro.core.baselines import float_logreg, sigmoid
-from repro.core.protocol import Copml, CopmlConfig, case2_params
-from repro.data import pipeline
-
-
-def _acc(x, y, w):
-    return float(((sigmoid(x @ np.asarray(w, np.float64)) > .5) == y).mean())
+from repro import api
 
 
 def run(report):
-    for ds, d, margin in (("cifar10_like", 96, 1.2),
-                          ("gisette_like", 128, 3.0)):
-        x, y, xt, yt = pipeline.classification_dataset(
-            m=480, d=d, seed=5, margin=margin, test_m=160)
-        n = 15
-        k, t = case2_params(n)
-        cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=1.0)
-        proto = Copml(cfg, x.shape[0], x.shape[1])
-        cx, cy = pipeline.split_clients(x, y, n)
-        t0 = time.perf_counter()
-        _, w = proto.train(jax.random.PRNGKey(0), cx, cy, iters=40)
-        dt = time.perf_counter() - t0
-        wf = float_logreg(x, y, 1.0, 40)
-        acc_c, acc_f = _acc(xt, yt, np.asarray(w)), _acc(xt, yt, wf)
-        report(f"fig4/{ds}_copml_acc", dt * 1e6, f"{acc_c:.4f}")
-        report(f"fig4/{ds}_float_acc", 0.0, f"{acc_f:.4f}")
-        report(f"fig4/{ds}_parity_gap", 0.0, f"{acc_f - acc_c:+.4f}")
+    for ds in ("cifar10_like", "gisette_like"):
+        copml = api.fit(ds, "copml", "jit", key=0, history=False)
+        plain = api.fit(ds, "float", "eager", key=0, history=False)
+        gap = plain.final_accuracy - copml.final_accuracy
+        report(f"fig4/{ds}_copml_acc", copml.wall_time_s * 1e6,
+               f"{copml.final_accuracy:.4f}", workload=ds)
+        report(f"fig4/{ds}_float_acc", plain.wall_time_s * 1e6,
+               f"{plain.final_accuracy:.4f}", workload=ds,
+               protocol="float", engine="eager")
+        report(f"fig4/{ds}_parity_gap", 0.0, f"{gap:+.4f}", workload=ds,
+               protocol="copml_vs_float", engine="-")

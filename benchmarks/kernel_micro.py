@@ -108,40 +108,27 @@ def run_multiclient(report):
 
 
 def run_engine(report):
-    """Protocol engine: eager per-step dispatch vs the lax.scan train_jit.
+    """Protocol engine axis via api.fit: eager per-step dispatch vs the
+    lax.scan jit engine on the `engine_micro` workload.
 
     Measures end-to-end training wall time (setup included for both; both
-    step programs are compiled and warm, so the delta is per-iteration
-    dispatch only).  On a single CPU host the two are near wall parity --
-    the scan engine's wins are the single dispatch (no N-step Python
-    round-trips, which matters on real accelerators) and the in-graph
-    model history that makes callbacks free."""
-    import jax.random as jrandom
-    import time as _t
+    step programs are compiled and warm after the first fit, so the delta
+    is per-iteration dispatch only).  On a single CPU host the two are
+    near wall parity -- the scan engine's wins are the single dispatch (no
+    N-step Python round-trips, which matters on real accelerators) and the
+    in-graph model history that makes callbacks free."""
+    from repro import api
 
-    from repro.core.protocol import Copml, CopmlConfig, case1_params
-    from repro.data import pipeline
-
-    x, y = pipeline.classification_dataset(m=208, d=12, seed=1, margin=2.0)
-    n = 13
-    k, t = case1_params(n)
-    cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=1.0)
-    proto = Copml(cfg, x.shape[0], x.shape[1])
-    cx, cy = pipeline.split_clients(x, y, n)
-    iters = 20
-    key = jrandom.PRNGKey(0)
-
-    runners = (("eager", proto.train_eager), ("scan", proto.train_jit))
-    best = {name: float("inf") for name, _ in runners}
-    for name, fn in runners:                   # compile/warm both
-        fn(key, cx, cy, iters)
+    wl, iters = "engine_micro", 20
+    engines = ("eager", "jit")
+    best = {e: float("inf") for e in engines}
+    for e in engines:                          # compile/warm both
+        api.fit(wl, "copml", e, key=0, iters=iters, history=False)
     for _ in range(3):                         # interleaved best-of-reps
-        for name, fn in runners:
-            t0 = _t.perf_counter()
-            _, w = fn(key, cx, cy, iters)[:2]
-            jax.block_until_ready(w)
-            best[name] = min(best[name], _t.perf_counter() - t0)
-    for name, _ in runners:
-        dt = best[name]
-        report(f"kernel_micro/copml_train_{name}_{iters}it", dt * 1e6,
-               f"{iters / dt:.1f}_steps_s")
+        for e in engines:
+            res = api.fit(wl, "copml", e, key=0, iters=iters, history=False)
+            best[e] = min(best[e], res.wall_time_s)
+    for e in engines:
+        dt = best[e]
+        report(f"kernel_micro/copml_train_{e}_{iters}it", dt * 1e6,
+               f"{iters / dt:.1f}_steps_s", engine=e)

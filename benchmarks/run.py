@@ -1,57 +1,139 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one registered stage per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+    PYTHONPATH=src python -m benchmarks.run [--stage fig3,fig4,...]
+    PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --stage engine --json out.json
 
-Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+Stages come from the STAGES registry (no hand-wired if/elif); each
+measurement row records the (workload, protocol, engine) run triple from
+the repro.api axes -- stages give a default triple, individual rows may
+override.  Output is ``name,us_per_call,derived`` CSV on stdout plus, with
+--json, the full rows (triple included) as JSON.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 import traceback
+from typing import Callable
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated subset: kernel,engine,distributed,"
-                         "fig3,fig4,table1,table2,roofline")
-    args = ap.parse_args(argv)
-    only = set(args.only.split(",")) if args.only else None
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One registered benchmark stage.
 
-    rows = []
+    run(report, ctx): `report(name, us, derived, *, workload=, protocol=,
+    engine=)` records a row (triple kwargs default to the stage's);
+    `ctx` is a shared dict for cross-stage products (the kernel stage
+    publishes the measured field MAC/s for the modeled stages)."""
+    key: str
+    run: Callable
+    triple: tuple            # default (workload, protocol, engine) for rows
+    doc: str
 
-    def report(name: str, us_per_call: float, derived: str = ""):
-        row = f"{name},{us_per_call:.1f},{derived}"
-        rows.append(row)
-        print(row, flush=True)
 
-    print("name,us_per_call,derived")
-    failures = []
-
-    def stage(key, fn):
-        if only and key not in only:
-            return None
-        try:
-            return fn()
-        except Exception as e:  # noqa: BLE001
-            failures.append((key, e))
-            traceback.print_exc()
-            return None
-
+def build_stages() -> dict:
+    """The stage registry, in execution order (kernel feeds fig3/table1)."""
     from . import (distributed_bench, fig3_speedup, fig4_accuracy,
                    kernel_micro, roofline_report, table1_breakdown,
                    table2_complexity)
 
-    macs = stage("kernel", lambda: kernel_micro.run(report))
-    stage("engine", lambda: kernel_micro.run_engine(report))
-    stage("distributed", lambda: distributed_bench.run(report))
-    stage("fig4", lambda: fig4_accuracy.run(report))
-    stage("fig3", lambda: fig3_speedup.run(report, macs))
-    stage("table1", lambda: table1_breakdown.run(report, macs))
-    stage("table2", lambda: table2_complexity.run(report))
-    stage("roofline", lambda: roofline_report.run(report))
+    def kernel(report, ctx):
+        ctx["field_macs_per_s"] = kernel_micro.run(report)
+
+    stages = [
+        Stage("kernel", kernel, ("synthetic", "-", "jit"),
+              "field/kernel microbenchmarks; calibrates field MAC/s"),
+        Stage("engine", lambda report, ctx: kernel_micro.run_engine(report),
+              ("engine_micro", "copml", "-"),
+              "api.fit engine comparison: eager vs jit scan"),
+        Stage("distributed",
+              lambda report, ctx: distributed_bench.run(report),
+              ("copml_dist_cli", "copml", "sharded:8"),
+              "mesh-sharded vs single-device wall time (subprocess)"),
+        Stage("fig4", lambda report, ctx: fig4_accuracy.run(report),
+              ("fig4", "copml", "jit"),
+              "accuracy parity vs plaintext (paper Fig. 4)"),
+        Stage("fig3",
+              lambda report, ctx: fig3_speedup.run(
+                  report, ctx.get("field_macs_per_s")),
+              ("paper_scale", "copml", "modeled"),
+              "training-time speedup vs MPC baselines (paper Fig. 3)"),
+        Stage("table1",
+              lambda report, ctx: table1_breakdown.run(
+                  report, ctx.get("field_macs_per_s")),
+              ("cifar10_paper", "copml", "modeled"),
+              "comm/comp/enc breakdown at N=50 (paper Table I)"),
+        Stage("table2", lambda report, ctx: table2_complexity.run(report),
+              ("table2", "copml", "jit"),
+              "measured cost scaling vs complexity claims (paper Table II)"),
+        Stage("roofline", lambda report, ctx: roofline_report.run(report),
+              ("-", "-", "-"),
+              "compiled-program roofline report"),
+    ]
+    return {s.key: s for s in stages}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage", "--only", dest="stage", default=None,
+                    help="comma-separated subset of registered stages "
+                         "(--only kept as an alias)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows (with their "
+                         "(workload, protocol, engine) triple) as JSON")
+    ap.add_argument("--list", action="store_true",
+                    help="print the stage registry and exit")
+    args = ap.parse_args(argv)
+
+    stages = build_stages()
+    if args.list:
+        for s in stages.values():
+            print(f"{s.key:12s} {s.doc}")
+        return
+    selected = None
+    if args.stage:
+        selected = set(args.stage.split(","))
+        unknown = selected - set(stages)
+        if unknown:
+            ap.error(f"unknown stage(s) {sorted(unknown)}; "
+                     f"registered: {sorted(stages)}")
+
+    rows: list = []
+    failures: list = []
+    ctx: dict = {}
+    print("name,us_per_call,derived")
+
+    def make_report(stage: Stage):
+        def report(name: str, us_per_call: float, derived: str = "", *,
+                   workload=None, protocol=None, engine=None):
+            w, p, e = stage.triple
+            rows.append({
+                "stage": stage.key, "name": name,
+                "us_per_call": float(us_per_call), "derived": derived,
+                "workload": workload or w, "protocol": protocol or p,
+                "engine": engine or e,
+            })
+            print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+        return report
+
+    for stage in stages.values():
+        if selected and stage.key not in selected:
+            continue
+        try:
+            stage.run(make_report(stage), ctx)
+        except Exception as e:  # noqa: BLE001
+            failures.append((stage.key, repr(e)))
+            traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows,
+                       "failures": [list(f_) for f_ in failures]}, f,
+                      indent=1)
 
     if failures:
         print(f"{len(failures)} benchmark stages failed", file=sys.stderr)

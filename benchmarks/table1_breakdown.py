@@ -33,11 +33,12 @@ def run(report, field_macs_per_s: float | None = None):
     }
     for name, c in rows.items():
         p = PAPER[name]
+        proto = "copml" if name.startswith("copml") else "mpc_baseline"
         report(f"table1/{name}_comp_s", c["comp_s"] * 1e6,
-               f"paper_{p[0]}s")
+               f"paper_{p[0]}s", protocol=proto)
         report(f"table1/{name}_comm_s", c["comm_s"] * 1e6,
-               f"paper_{p[1]}s")
+               f"paper_{p[1]}s", protocol=proto)
         report(f"table1/{name}_encdec_s", c["enc_s"] * 1e6,
-               f"paper_{p[2]}s")
+               f"paper_{p[2]}s", protocol=proto)
         report(f"table1/{name}_total_s", c["total_s"] * 1e6,
-               f"paper_{p[3]}s")
+               f"paper_{p[3]}s", protocol=proto)

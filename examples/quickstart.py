@@ -4,48 +4,42 @@
 them ever seeing another client's data, the intermediate models, or the
 gradients -- only the final model is revealed (paper Algorithm 1).
 
-    PYTHONPATH=src python examples/quickstart.py
+Everything goes through the repro.api front door: a run is a
+(workload, protocol, engine) triple and returns a TrainResult.
+
+    pip install -e .          # once, from the repo root
+    python examples/quickstart.py
+
+(or skip the install and run with  PYTHONPATH=src python examples/quickstart.py)
 """
 
-import sys
-
-sys.path.insert(0, "src")
-
-import jax
-import numpy as np
-
-from repro.core.baselines import float_logreg, sigmoid
-from repro.core.protocol import Copml, CopmlConfig, case1_params
-from repro.data import pipeline
+try:
+    from repro import api
+except ModuleNotFoundError:
+    raise SystemExit(
+        "repro is not importable -- run `pip install -e .` once from the "
+        "repo root, or prefix the command with PYTHONPATH=src")
 
 
 def main():
-    m, d, n_clients, iters = 260, 16, 13, 30
-    x, y = pipeline.classification_dataset(m=m, d=d, seed=0, margin=2.0)
+    wl = api.get_workload("quickstart")
+    cfg = wl.cfg
+    print(f"COPML: N={wl.n_clients} clients, K={cfg.k} (parallelization), "
+          f"T={cfg.t} (privacy), recovery threshold R={cfg.recovery_threshold}")
+    print(f"  -> tolerates {wl.n_clients - cfg.recovery_threshold} stragglers "
+          f"per iteration, privacy against any {cfg.t} colluding clients")
 
-    k, t = case1_params(n_clients)           # paper Case 1: max parallelism
-    cfg = CopmlConfig(n_clients=n_clients, k=k, t=t, eta=1.0)
-    print(f"COPML: N={n_clients} clients, K={k} (parallelization), "
-          f"T={t} (privacy), recovery threshold R={cfg.recovery_threshold}")
-    print(f"  -> tolerates {n_clients - cfg.recovery_threshold} stragglers "
-          f"per iteration, privacy against any {t} colluding clients")
+    secure = api.fit(wl, "copml", "jit", key=0)
+    for t in range(0, secure.iters, 10):
+        print(f"  iter {t:3d}  accuracy {secure.accuracy[t]:.3f}")
 
-    proto = Copml(cfg, m, d)
-    client_x, client_y = pipeline.split_clients(x, y, n_clients)
-
-    def report(t_, w):
-        if t_ % 10 == 0:
-            acc = ((sigmoid(x @ np.asarray(w, np.float64)) > .5) == y).mean()
-            print(f"  iter {t_:3d}  accuracy {acc:.3f}")
-
-    _, w_secure = proto.train(jax.random.PRNGKey(0), client_x, client_y,
-                              iters=iters, callback=report)
-
-    w_float = float_logreg(x, y, eta=1.0, iters=iters)
-    acc_s = ((sigmoid(x @ np.asarray(w_secure, np.float64)) > .5) == y).mean()
-    acc_f = ((sigmoid(x @ w_float) > .5) == y).mean()
-    print(f"\nfinal accuracy: COPML {acc_s:.3f} vs float logreg {acc_f:.3f}"
+    plain = api.fit(wl, "float", "eager", key=0)
+    print(f"\nfinal accuracy: COPML {secure.final_accuracy:.3f} vs float "
+          f"logreg {plain.final_accuracy:.3f}"
           f"  (paper Fig. 4: parity within ~1.3 points)")
+    print(f"modeled per-client cost on the paper's 40 Mbps WAN: "
+          f"COPML {secure.cost['total_s']:.0f}s total "
+          f"({secure.cost['comm_s']:.0f}s communication)")
 
 
 if __name__ == "__main__":

@@ -7,12 +7,9 @@ with the paper's secure truncation -- no host ever sees another's gradient
 reconstruct (straggler tolerance).  See core/secure_agg.py + DESIGN.md
 section 4.
 
+    python examples/secure_agg_lm.py          # after `pip install -e .`
     PYTHONPATH=src python examples/secure_agg_lm.py
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.configs import registry
 from repro.core.secure_agg import SecureAggConfig

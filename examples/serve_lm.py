@@ -3,13 +3,11 @@
 Serves batched requests through the same decode_step the multi-pod dry-run
 lowers (decode_32k / long_500k shapes).
 
+    python examples/serve_lm.py --arch zamba2-2.7b   # after `pip install -e .`
     PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b
 """
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 

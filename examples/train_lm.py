@@ -5,13 +5,11 @@ data pipeline, async checkpointing, crash-resume.  Default arguments are
 sized for this CPU container (a scaled smollm); pass --hundred-m for the
 actual ~100M configuration (slower on CPU).
 
+    python examples/train_lm.py --steps 200   # after `pip install -e .`
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.configs import registry
 from repro.train import trainer

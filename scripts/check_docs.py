@@ -7,7 +7,10 @@ Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
    docs/ARCHITECTURE.md (a new subsystem must at least be named);
 2. every relative markdown link in README.md and docs/*.md resolves to an
    existing file (anchors are checked for same-file heading existence);
-3. the commands shown in README's Verify section reference real files.
+3. the commands shown in README's Verify section reference real files;
+4. docs/API.md covers the live repro.api registries: every registered
+   protocol, engine, and workload name and every TrainResult field must
+   appear there (imports the package, so a stale doc fails the lint).
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -92,6 +95,36 @@ def check_commands() -> list:
     return problems
 
 
+def check_api() -> list:
+    """docs/API.md must document the LIVE api registries."""
+    path = os.path.join(ROOT, "docs", "API.md")
+    if not os.path.exists(path):
+        return ["missing docs/API.md (the repro.api reference)"]
+    with open(path) as f:
+        text = f.read()
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        import dataclasses
+
+        from repro import api
+    except Exception as e:  # noqa: BLE001 -- an unimportable api IS a finding
+        return [f"repro.api failed to import for the docs lint: {e!r}"]
+    problems = []
+    names = (
+        [("protocol", n) for n in api.protocol_names()]
+        + [("engine", n) for n in api.ENGINES]
+        + [("workload", n) for n in api.workload_names()]
+        + [("TrainResult field", f.name)
+           for f in dataclasses.fields(api.TrainResult)])
+    for kind, name in names:
+        if f"`{name}`" not in text:
+            problems.append(f"docs/API.md: {kind} `{name}` is registered "
+                            f"but undocumented")
+    return problems
+
+
 def main() -> int:
     doc_text = ""
     for rel in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
@@ -101,7 +134,8 @@ def main() -> int:
             return 1
         with open(path) as f:
             doc_text += f.read()
-    problems = check_packages(doc_text) + check_links() + check_commands()
+    problems = (check_packages(doc_text) + check_links() + check_commands()
+                + check_api())
     for p in problems:
         print(p)
     if not problems:

@@ -1,0 +1,39 @@
+"""repro.api -- one front door for every experiment in the repo.
+
+A run is fully specified by three orthogonal axes:
+
+    workload  x  protocol  x  engine
+    (what)       (how it's secured)   (how it executes)
+
+    from repro import api
+    res = api.fit("cifar10_like", "copml", "jit")
+    res = api.fit("smoke", "mpc_baseline", "eager", iters=5)
+    res = api.fit("smoke", "copml", "sharded:8")      # real collectives
+
+Every fit returns the same TrainResult schema (opened model, per-step
+history, accuracy curve, wall time, modeled comm/comp cost), so the
+paper's Fig. 3/4 and Table I/II are pure formatting.  New protocols,
+workloads, and engines plug in via the registries
+(api.register_protocol / api.register_workload) without another bespoke
+driver -- see docs/API.md for the axes, registry names, and the
+migration table from the old Copml.train_* call conventions.
+"""
+
+from .engine import EAGER, ENGINES, JIT, SHARDED, EngineSpec
+from .engine import parse as parse_engine
+from .protocols import PROTOCOLS, Protocol, fit, run_copml_engine
+from .protocols import names as protocol_names
+from .protocols import register as register_protocol
+from .result import TrainResult, accuracy_curve, accuracy_of
+from .workloads import WORKLOADS, Workload
+from .workloads import get as get_workload
+from .workloads import names as workload_names
+from .workloads import register as register_workload
+
+__all__ = [
+    "EAGER", "ENGINES", "JIT", "PROTOCOLS", "SHARDED", "EngineSpec",
+    "Protocol", "TrainResult", "WORKLOADS", "Workload", "accuracy_curve",
+    "accuracy_of", "fit", "get_workload", "parse_engine", "protocol_names",
+    "register_protocol", "register_workload", "run_copml_engine",
+    "workload_names",
+]

@@ -1,0 +1,49 @@
+"""CLI front door: run any (workload, protocol, engine) triple.
+
+    repro-fit smoke --protocol copml --engine jit          # console script
+    PYTHONPATH=src python -m repro.api.cli --list          # registries
+
+Prints the TrainResult summary line (and the accuracy curve with -v).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from . import ENGINES, PROTOCOLS, fit, workload_names
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("workload", nargs="?", default="quickstart",
+                    help="registry name (see --list)")
+    ap.add_argument("--protocol", default="copml",
+                    choices=sorted(PROTOCOLS))
+    ap.add_argument("--engine", default="jit",
+                    help='"eager" | "jit" | "sharded[:N]"')
+    ap.add_argument("--iters", type=int, default=None,
+                    help="GD iterations (default: the workload's)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the per-step model history / accuracy curve")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the three registries and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("workloads:", ", ".join(workload_names()))
+        print("protocols:", ", ".join(sorted(PROTOCOLS)))
+        print("engines:  ", ", ".join(ENGINES))
+        return
+
+    res = fit(args.workload, args.protocol, args.engine, key=args.seed,
+              iters=args.iters, history=not args.no_history)
+    print(res.summary())
+    if args.verbose and res.accuracy is not None:
+        for t, a in enumerate(res.accuracy):
+            print(f"  iter {t:3d}  accuracy {a:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Execution engines: the *how* axis of a run.
+
+An engine decides how a protocol's training loop executes -- it never
+changes WHAT is computed (engine swaps are bit-exact for COPML, see
+tests/test_api.py):
+
+  eager    Python loop, one jitted step per iteration.  Ground truth and
+           step-through debugging.
+  jit      the whole setup+scan loop as ONE compiled XLA program
+           (single dispatch, in-graph model history).
+  sharded  jit with the client axis PHYSICALLY split over a 1-D
+           ("clients",) mesh; every exchange is a real collective
+           (all_to_all / reduce-scatter / all_gather).  COPML only.
+
+`EngineSpec` is the value the facade passes around; `parse` accepts the
+spec itself, a plain string ("eager" | "jit" | "sharded" | "sharded:8"),
+or a jax Mesh (treated as sharded over that mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core import meshutil
+
+ENGINES = ("eager", "jit", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """One execution strategy.  `devices`/`mesh` apply to sharded only:
+    mesh wins if given, else a ("clients",) mesh over `devices` devices
+    (None = all visible) is built at fit time."""
+    kind: str
+    devices: int | None = None
+    mesh: object | None = None          # jax.sharding.Mesh
+
+    def __post_init__(self):
+        if self.kind not in ENGINES:
+            raise ValueError(
+                f"unknown engine kind {self.kind!r}; expected one of {ENGINES}")
+        if self.kind != "sharded" and (self.devices or self.mesh is not None):
+            raise ValueError(f"engine {self.kind!r} takes no mesh/devices")
+
+    @property
+    def label(self) -> str:
+        """Stable row label: "eager" | "jit" | "sharded" | "sharded:8"."""
+        if self.kind != "sharded":
+            return self.kind
+        if self.mesh is not None:
+            return f"sharded:{self.mesh.size}"
+        return f"sharded:{self.devices}" if self.devices else "sharded"
+
+    def resolve_mesh(self):
+        """The 1-D client mesh this spec runs on (sharded only)."""
+        assert self.kind == "sharded", self.kind
+        if self.mesh is not None:
+            return self.mesh
+        return meshutil.client_mesh(self.devices)
+
+
+EAGER = EngineSpec("eager")
+JIT = EngineSpec("jit")
+SHARDED = EngineSpec("sharded")
+
+
+def parse(spec) -> EngineSpec:
+    """Normalize a user-supplied engine spec to an EngineSpec."""
+    if isinstance(spec, EngineSpec):
+        return spec
+    if hasattr(spec, "axis_names"):               # a jax Mesh
+        return EngineSpec("sharded", mesh=spec)
+    if isinstance(spec, str):
+        kind, _, arg = spec.partition(":")
+        if arg:
+            if kind != "sharded":
+                raise ValueError(f"engine {kind!r} takes no :N suffix")
+            return EngineSpec("sharded", devices=int(arg))
+        return EngineSpec(kind)
+    raise TypeError(f"cannot parse engine spec {spec!r}")

@@ -1,0 +1,310 @@
+"""Protocol registry: the *who-computes-what* axis of a run.
+
+Five interchangeable training protocols over the same workloads, the
+paper's Section V comparison as a registry (fit one name against another
+and the Fig. 3/4 / Table I artifacts are pure formatting of TrainResults):
+
+  copml         Algorithm 1: LCC-coded secret-shared training, local-only
+                hot loop (core/protocol.Copml).  eager | jit | sharded.
+  mpc_baseline  the [BGW88]/[BH08] Appendix-D baselines: every multiply
+                is a secure multiplication with degree reduction
+                (core/baselines.MpcBaseline).  eager | jit.
+  float         conventional plaintext logistic regression (the Fig. 4
+                reference).  eager | jit.
+  poly_float    plaintext GD with the degree-r polynomial sigmoid --
+                isolates approximation from quantization error.
+                eager | jit.
+  secure_agg    gradient-privacy-only training: clear local gradients,
+                COPML-coded secure aggregation of the exchange
+                (core/secure_agg).  eager | jit.
+
+All protocol drivers and dataset arrays are cached per (hashable)
+Workload, so repeated fits of the same shape reuse compiled programs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from ..core import baselines, cost_model, secure_agg
+from ..core.protocol import Copml
+from . import engine as engine_mod
+from . import result as result_mod
+from . import workloads as workloads_mod
+
+PROTOCOLS: dict = {}
+
+
+def register(protocol: "Protocol") -> "Protocol":
+    PROTOCOLS[protocol.name] = protocol
+    return protocol
+
+
+def get(name: str) -> "Protocol":
+    if name not in PROTOCOLS:
+        known = ", ".join(sorted(PROTOCOLS))
+        raise KeyError(f"unknown protocol {name!r}; registered: {known}")
+    return PROTOCOLS[name]
+
+
+def names() -> tuple:
+    return tuple(sorted(PROTOCOLS))
+
+
+# ---------------------------------------------------------------- the facade
+
+
+def fit(workload, protocol: str = "copml", engine="jit", *, key=0,
+        iters: int | None = None, subset=None, history: bool = True,
+        ) -> result_mod.TrainResult:
+    """Train `workload` with `protocol` on `engine`; the one front door.
+
+    workload: registry name or an ad-hoc workloads.Workload instance.
+    protocol: name in PROTOCOLS.
+    engine:   "eager" | "jit" | "sharded[:N]" | EngineSpec | jax Mesh.
+    key:      int seed or jax PRNGKey.
+    iters:    GD iterations (None = the workload's default).
+    subset:   straggler decode subset (None = the workload's default).
+    history:  keep the per-step opened-model trajectory + accuracy curve.
+    """
+    return get(protocol).fit(workload, engine, key=key, iters=iters,
+                             subset=subset, history=history)
+
+
+class Protocol:
+    """One training protocol behind the common fit() interface.
+
+    Subclasses implement `_run` (returning the raw engine outputs) and
+    optionally `cost`; the base class owns workload/engine resolution,
+    timing, and TrainResult assembly."""
+
+    name: str = "?"
+    engines: tuple = ("eager", "jit")
+    supports_subset: bool = False    # straggler decode subsets
+
+    def fit(self, workload, engine="jit", *, key=0, iters=None, subset=None,
+            history=True) -> result_mod.TrainResult:
+        wl = workloads_mod.resolve(workload)
+        spec = engine_mod.parse(engine)
+        if spec.kind not in self.engines:
+            raise ValueError(
+                f"protocol {self.name!r} supports engines {self.engines}, "
+                f"not {spec.kind!r}")
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        iters = wl.iters if iters is None else int(iters)
+        subset = wl.subset if subset is None else tuple(subset)
+        if subset is not None and not self.supports_subset:
+            raise ValueError(
+                f"protocol {self.name!r} has no straggler-subset decoding; "
+                f"drop the subset (workload or argument)")
+
+        t0 = time.perf_counter()
+        w, hist, state = self._run(wl, spec, key, iters, subset, history)
+        w = np.asarray(jax.block_until_ready(w))
+        wall = time.perf_counter() - t0
+
+        hist = None if hist is None else np.asarray(hist)
+        x_eval, y_eval = wl.eval_set()
+        acc = None if hist is None else result_mod.accuracy_curve(
+            hist, x_eval, y_eval)
+        return result_mod.TrainResult(
+            workload=wl.name, protocol=self.name, engine=spec.label,
+            iters=iters, weights=w, wall_time_s=wall, history=hist,
+            accuracy=acc,
+            final_accuracy=result_mod.accuracy_of(w, x_eval, y_eval),
+            cost=self.cost(wl, iters), state=state)
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        """-> (weights, history-or-None, protocol-native state)"""
+        raise NotImplementedError
+
+    def cost(self, wl, iters: int) -> dict | None:
+        """Modeled per-client comm/comp/enc on the paper's WAN params."""
+        return None
+
+    def _cost_workload(self, wl, iters: int) -> cost_model.Workload:
+        return cost_model.Workload(m=wl.m, d=wl.d, n=wl.n_clients,
+                                   k=wl.cfg.k, t=wl.cfg.t, iters=iters,
+                                   r=wl.cfg.r)
+
+
+def _stack_history(rows, d: int):
+    """Collected eager-engine history rows -> the same (iters, d) array the
+    scan engines produce (None stays None; zero iterations give (0, d), not
+    None, so the TrainResult schema is engine-independent)."""
+    if rows is None:
+        return None
+    return np.stack(rows) if rows else np.zeros((0, d), np.float32)
+
+
+def _history_recorder(history: bool):
+    """(rows, callback) for the eager engines: the callback appends each
+    step's opened model to rows; both are None when history is off."""
+    if not history:
+        return None, None
+    rows: list = []
+    return rows, lambda t, w: rows.append(np.asarray(w))
+
+
+# ------------------------------------------------------------------ copml
+
+
+def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
+                     iters: int, subset=None, history: bool = False,
+                     callback=None):
+    """THE dispatch from an EngineSpec to a Copml engine implementation.
+
+    Both api.fit and the deprecated Copml.train_* shims route through
+    here, so shim-vs-facade parity is structural.  Returns
+    (state, weights, history-or-None); `callback` is eager-only."""
+    spec = engine_mod.parse(spec)
+    subset = None if subset is None else tuple(subset)
+    if spec.kind == "eager":
+        hist_rows = [] if history else None
+
+        def cb(t, w):
+            if hist_rows is not None:
+                hist_rows.append(np.asarray(w))
+            if callback is not None:
+                callback(t, w)
+
+        state, w = proto._train_eager(
+            key, client_xs, client_ys, iters, subset=subset,
+            callback=cb if (history or callback) else None)
+        return state, w, _stack_history(hist_rows, proto.d)
+    if callback is not None:
+        raise ValueError("callback is only supported on the eager engine")
+    if spec.kind == "jit":
+        out = proto._train_jit(key, client_xs, client_ys, iters,
+                               subset=subset, history=history)
+    else:
+        out = proto._train_sharded(key, client_xs, client_ys, iters,
+                                   mesh=spec.resolve_mesh(), subset=subset,
+                                   history=history)
+    if history:
+        state, w, hist = out
+        return state, w, hist
+    state, w = out
+    return state, w, None
+
+
+class CopmlProtocol(Protocol):
+    name = "copml"
+    engines = ("eager", "jit", "sharded")
+    supports_subset = True           # decode from any R of N clients
+
+    def __init__(self):
+        self._drivers: dict = {}
+
+    def driver(self, wl) -> Copml:
+        """The (cached) Copml instance for a workload -- caching keeps the
+        per-instance jit/scan caches warm across fit() calls."""
+        if wl not in self._drivers:
+            self._drivers[wl] = Copml(wl.cfg, wl.m, wl.d)
+        return self._drivers[wl]
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        proto = self.driver(wl)
+        cx, cy = wl.client_data()
+        state, w, hist = run_copml_engine(proto, spec, key, cx, cy, iters,
+                                          subset=subset, history=history)
+        return w, hist, state
+
+    def cost(self, wl, iters):
+        return cost_model.copml_costs(self._cost_workload(wl, iters))
+
+
+class MpcBaselineProtocol(Protocol):
+    name = "mpc_baseline"
+    scheme = "bh08"
+    groups = 3
+
+    def __init__(self):
+        self._drivers: dict = {}
+
+    def driver(self, wl) -> baselines.MpcBaseline:
+        if wl not in self._drivers:
+            self._drivers[wl] = baselines.MpcBaseline(
+                wl.cfg, wl.m, wl.d, groups=self.groups, scheme=self.scheme)
+        return self._drivers[wl]
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        mb = self.driver(wl)
+        x, y, _, _ = wl.data()
+        if spec.kind == "jit":
+            out = mb.train_scan(key, x, y, iters, history=history)
+            return (out[1], out[2], out[0]) if history else \
+                (out[1], None, out[0])
+        rows, cb = _history_recorder(history)
+        state, w = mb.train(key, x, y, iters, callback=cb)
+        return w, _stack_history(rows, wl.d), state
+
+    def cost(self, wl, iters):
+        return cost_model.mpc_baseline_costs(
+            self._cost_workload(wl, iters), scheme=self.scheme,
+            groups=self.groups)
+
+
+class FloatProtocol(Protocol):
+    name = "float"
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        x, y, _, _ = wl.data()
+        eta = wl.cfg.eta
+        if spec.kind == "jit":
+            w, hist = baselines.float_logreg_scan(x, y, eta, iters,
+                                                  history=history)
+            return w, hist, None
+        rows, cb = _history_recorder(history)
+        w = baselines.float_logreg(x, y, eta, iters, callback=cb)
+        return w, _stack_history(rows, wl.d), None
+
+
+class PolyFloatProtocol(Protocol):
+    name = "poly_float"
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        x, y, _, _ = wl.data()
+        eta, r, bound = wl.cfg.eta, wl.cfg.r, wl.cfg.sigmoid_bound
+        if spec.kind == "jit":
+            w, hist = baselines.float_poly_logreg_scan(
+                x, y, eta, iters, r=r, bound=bound, history=history)
+            return w, hist, None
+        rows, cb = _history_recorder(history)
+        w = baselines.float_poly_logreg(x, y, eta, iters, r=r, bound=bound,
+                                        callback=cb)
+        return w, _stack_history(rows, wl.d), None
+
+
+class SecureAggProtocol(Protocol):
+    name = "secure_agg"
+    supports_subset = True           # reconstruct from any T+1 holders
+
+    def agg_config(self, wl) -> secure_agg.SecureAggConfig:
+        """Privacy threshold T from the workload's COPML parameterization;
+        lq/clip at the module defaults (validated against the field)."""
+        return secure_agg.SecureAggConfig(n_clients=wl.n_clients, t=wl.cfg.t)
+
+    def _run(self, wl, spec, key, iters, subset, history):
+        cx, cy = wl.client_data()
+        cfg, eta = self.agg_config(wl), wl.cfg.eta
+        if spec.kind == "jit":
+            w, hist = secure_agg.secure_logreg_scan(
+                key, cx, cy, cfg, eta, iters, subset=subset,
+                history=history)
+            return w, hist, cfg
+        rows, cb = _history_recorder(history)
+        w = secure_agg.secure_logreg(key, cx, cy, cfg, eta, iters,
+                                     subset=subset, callback=cb)
+        return w, _stack_history(rows, wl.d), cfg
+
+
+register(CopmlProtocol())
+register(MpcBaselineProtocol())
+register(FloatProtocol())
+register(PolyFloatProtocol())
+register(SecureAggProtocol())

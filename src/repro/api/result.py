@@ -1,0 +1,72 @@
+"""TrainResult: the uniform return value of api.fit.
+
+Every protocol x engine combination produces the same schema, so the
+paper-artifact reproductions (Fig. 3/4, Table I/II) become pure
+formatting over TrainResult fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _sigmoid(z):
+    return 1.0 / (1.0 + np.exp(-z))
+
+
+def accuracy_of(w, x, y) -> float:
+    """Binary accuracy of model w on (x, y)."""
+    z = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    return float(((_sigmoid(z) > 0.5) == np.asarray(y)).mean())
+
+
+def accuracy_curve(history, x, y) -> np.ndarray:
+    """Per-iteration accuracy of the opened model trajectory."""
+    return np.asarray([accuracy_of(w, x, y) for w in np.asarray(history)])
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """What a fit() returns, protocol- and engine-independent.
+
+    weights        final opened model, float (d,)
+    history        opened model after every step, float (iters, d), or None
+                   when the run was asked not to keep it
+    accuracy       per-step eval accuracy (iters,), or None without history
+    final_accuracy accuracy of `weights` on the workload's eval set
+    wall_time_s    end-to-end wall time of the run (setup + train + open;
+                   includes compilation on the first fit of a given shape)
+    cost           modeled per-client comm/comp/enc seconds on the paper's
+                   WAN parameters (core/cost_model), or None for protocols
+                   the paper does not price (float, poly_float, secure_agg)
+    state          protocol-native final state (e.g. CopmlState with the
+                   final secret shares), for tests and further inspection
+    """
+    workload: str
+    protocol: str
+    engine: str
+    iters: int
+    weights: np.ndarray
+    wall_time_s: float
+    history: np.ndarray | None = None
+    accuracy: np.ndarray | None = None
+    final_accuracy: float | None = None
+    cost: dict | None = None
+    state: object = None
+
+    @property
+    def triple(self) -> tuple:
+        """(workload, protocol, engine): the full run specification."""
+        return (self.workload, self.protocol, self.engine)
+
+    def summary(self) -> str:
+        parts = [f"{self.workload} x {self.protocol} x {self.engine}:",
+                 f"{self.iters} iters in {self.wall_time_s:.2f}s"]
+        if self.final_accuracy is not None:
+            parts.append(f"accuracy {self.final_accuracy:.3f}")
+        if self.cost is not None:
+            parts.append(f"modeled total {self.cost['total_s']:.0f}s "
+                         f"(comm {self.cost['comm_s']:.0f}s)")
+        return "  ".join(parts)

@@ -1,0 +1,143 @@
+"""Workload registry: the *what* axis of a run.
+
+A Workload fully specifies a training task: dataset shape + generation
+parameters (data/pipeline synthetic builders -- real corpora are not
+available offline), the COPML protocol parameterization (N, K, T, scales,
+eta), the default iteration budget, and an optional default straggler
+subset.  Together with a protocol name and an EngineSpec it pins down a
+run completely: `api.fit(workload, protocol, engine)`.
+
+The paper-scale shapes come straight from configs/copml_logreg.py (the
+single source of truth for Section V-A dataset dimensions); the reduced
+*_like entries mirror the shapes the benchmarks train for real on a CPU
+budget (benchmarks/fig4_accuracy.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..configs import copml_logreg
+from ..core.protocol import (CopmlConfig, case1_params, case2_params,
+                             derive_update_constants)
+from ..data import pipeline
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A named, fully-specified training task (hashable: protocol drivers
+    and dataset arrays are cached per workload across fit() calls)."""
+    name: str
+    m: int                      # total training rows (across all clients)
+    d: int                      # feature dimension
+    cfg: CopmlConfig            # N / K / T / scales / eta
+    seed: int = 0               # synthetic dataset seed
+    margin: float = 2.0         # class separation of the planted separator
+    test_m: int = 0             # held-out eval rows (0 = eval on train)
+    iters: int = 30             # default GD iterations
+    subset: tuple | None = None  # default straggler subset (decode clients)
+
+    @property
+    def n_clients(self) -> int:
+        return self.cfg.n_clients
+
+    def data(self):
+        """(x, y, x_test, y_test); the eval pair is (None, None) when
+        test_m == 0.  Cached: repeated fits reuse the same arrays."""
+        return _dataset(self.m, self.d, self.seed, self.margin, self.test_m)
+
+    def eval_set(self):
+        """The eval pair accuracy curves are scored against: the held-out
+        split when one exists, else the training set."""
+        x, y, xt, yt = self.data()
+        return (xt, yt) if xt is not None else (x, y)
+
+    def client_data(self):
+        """Per-client row splits (paper Section V-A even distribution)."""
+        x, y, _, _ = self.data()
+        return pipeline.split_clients(x, y, self.n_clients)
+
+
+_DATA_CACHE: dict = {}
+
+
+def _dataset(m, d, seed, margin, test_m):
+    key = (m, d, seed, margin, test_m)
+    if key not in _DATA_CACHE:
+        out = pipeline.classification_dataset(m=m, d=d, seed=seed,
+                                              margin=margin, test_m=test_m)
+        _DATA_CACHE[key] = out if test_m else (out[0], out[1], None, None)
+    return _DATA_CACHE[key]
+
+
+# ------------------------------------------------------------------ registry
+
+WORKLOADS: dict = {}
+
+
+def register(workload: Workload, replace: bool = False) -> Workload:
+    if not replace and workload.name in WORKLOADS:
+        raise ValueError(f"workload {workload.name!r} already registered")
+    WORKLOADS[workload.name] = workload
+    return workload
+
+
+def get(name: str) -> Workload:
+    if name not in WORKLOADS:
+        known = ", ".join(sorted(WORKLOADS))
+        raise KeyError(f"unknown workload {name!r}; registered: {known}")
+    return WORKLOADS[name]
+
+
+def resolve(workload) -> Workload:
+    """Accept a registry name or an ad-hoc Workload instance."""
+    if isinstance(workload, Workload):
+        return workload
+    return get(workload)
+
+
+def names() -> tuple:
+    return tuple(sorted(WORKLOADS))
+
+
+def _cfg(n, k, t, eta=1.0):
+    return CopmlConfig(n_clients=n, k=k, t=t, eta=eta)
+
+
+# reduced-scale: train for real on a CPU budget ---------------------------
+register(Workload("smoke", m=96, d=12, cfg=_cfg(13, *case1_params(13)),
+                  iters=10))
+register(Workload("quickstart", m=260, d=16, cfg=_cfg(13, *case1_params(13)),
+                  iters=30))
+register(Workload("engine_micro", m=208, d=12,
+                  cfg=_cfg(13, *case1_params(13)), seed=1, iters=20))
+# shapes/margins match benchmarks/fig4_accuracy.py (paper Fig. 4 at
+# reduced m with a held-out eval split)
+register(Workload("cifar10_like", m=480, d=96, cfg=_cfg(15, *case2_params(15)),
+                  seed=5, margin=1.2, test_m=160, iters=40))
+register(Workload("gisette_like", m=480, d=128,
+                  cfg=_cfg(15, *case2_params(15)), seed=5, margin=3.0,
+                  test_m=160, iters=40))
+# straggler demo: K=3, T=1 at N=13 leaves R=10 < N; decode from the LAST R
+register(Workload("smoke_straggler", m=96, d=12, cfg=_cfg(13, 3, 1), iters=4,
+                  subset=tuple(range(3, 13))))
+
+def _field_safe_cfg(cfg: CopmlConfig, m: int) -> CopmlConfig:
+    """Keep the paper's eta when the derived truncation depth fits the
+    26-bit field; otherwise apply the documented eta-with-m scaling (the
+    field-size scalability limit, same rule as copml_dist.make_config) so
+    every registered workload is actually fittable."""
+    try:
+        derive_update_constants(cfg, m)
+        return cfg
+    except AssertionError:
+        return dataclasses.replace(cfg, eta=max(cfg.eta, m / 4096.0))
+
+
+# paper-scale: Section V-A shapes from configs/copml_logreg (data this size
+# is only materialized if a fit actually asks for it)
+for _w in copml_logreg.WORKLOADS.values():
+    register(Workload(_w.name, m=_w.m, d=_w.d,
+                      cfg=_field_safe_cfg(_w.cfg, _w.m), iters=50))

@@ -7,6 +7,11 @@ regression.  Shapes mirror the paper's datasets (Section V-A):
 
 Not a ModelConfig -- the COPML protocol has its own config type; the dry-run
 and roofline treat it via launch/copml_dist.py.
+
+This module is the source of truth for the PAPER-SCALE shapes only; the
+runnable workload registry (these entries plus reduced-scale ones with
+eval splits, data builders attached) lives in repro.api.workloads and is
+what api.fit consumes.
 """
 
 import dataclasses

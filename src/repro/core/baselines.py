@@ -44,7 +44,7 @@ def float_logreg(x, y, eta: float, iters: int, callback=None):
 
 
 def float_poly_logreg(x, y, eta: float, iters: int, r: int = 1,
-                      bound: float = 10.0):
+                      bound: float = 10.0, callback=None):
     """Float GD with the degree-r polynomial sigmoid -- isolates the
     approximation error from the quantization error."""
     coeffs = sigmoid_approx.fit_sigmoid_poly(r, bound)
@@ -52,10 +52,50 @@ def float_poly_logreg(x, y, eta: float, iters: int, r: int = 1,
     y = np.asarray(y, np.float64)
     m, d = x.shape
     w = np.zeros(d)
-    for _ in range(iters):
+    for t in range(iters):
         ghat = sigmoid_approx.poly_eval_float(coeffs, x @ w)
         w -= eta / m * (x.T @ (ghat - y))
+        if callback is not None:
+            callback(t, w)
     return w
+
+
+def _float_scan(x, y, eta: float, iters: int, ghat_fn, history: bool):
+    """Shared lax.scan float trainer: the jit engine for the float
+    protocols.  float32 on-device, so it tracks the float64 numpy loops to
+    accuracy (not bit-) tolerance."""
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    m, d = xj.shape
+
+    def body(w, _):
+        g = xj.T @ (ghat_fn(xj @ w) - yj)
+        w = w - (eta / m) * g
+        return w, (w if history else None)
+
+    return jax.lax.scan(body, jnp.zeros((d,), jnp.float32), None,
+                        length=iters)
+
+
+@partial(jax.jit, static_argnames=("eta", "iters", "history"))
+def float_logreg_scan(x, y, eta: float, iters: int, history: bool = True):
+    """float_logreg as one compiled lax.scan; (w, history-or-None)."""
+    return _float_scan(x, y, eta, iters, jax.nn.sigmoid, history)
+
+
+@partial(jax.jit, static_argnames=("eta", "iters", "r", "bound", "history"))
+def float_poly_logreg_scan(x, y, eta: float, iters: int, r: int = 1,
+                           bound: float = 10.0, history: bool = True):
+    """float_poly_logreg as one compiled lax.scan; (w, history-or-None)."""
+    coeffs = sigmoid_approx.fit_sigmoid_poly(r, bound)
+
+    def ghat(z):
+        acc = jnp.full_like(z, float(coeffs[-1]))
+        for c in coeffs[-2::-1]:
+            acc = acc * z + float(c)
+        return acc
+
+    return _float_scan(x, y, eta, iters, ghat, history)
 
 
 @jax.tree_util.register_dataclass
@@ -141,14 +181,45 @@ class MpcBaseline:
             state, w_shares=field.sub(state.w_shares, delta),
             step=state.step + 1)
 
-    def train(self, key, x, y, iters: int):
+    def train(self, key, x, y, iters: int, callback=None):
         ks, ki = jax.random.split(key)
         state = self.setup(ks, x, y)
-        step = jax.jit(self.iteration)
+        step = self._jitted_step()
         for t in range(iters):
             state = step(jax.random.fold_in(ki, t), state)
+            if callback is not None:
+                callback(t, self.open_model(state))
         return state, self.open_model(state)
+
+    def train_scan(self, key, x, y, iters: int, history: bool = False):
+        """train() as ONE compiled lax.scan -- the facade's jit engine.
+
+        Same key schedule as the eager loop (fold_in per step), so the two
+        engines are bit-exact.  Returns (state, w[, history])."""
+        ks, ki = jax.random.split(key)
+        state = self.setup(ks, x, y)
+        state, hist = _mpc_scan(self, ki, state, int(iters), bool(history))
+        w = self.open_model(state)
+        return (state, w, hist) if history else (state, w)
+
+    def _jitted_step(self):
+        if "_step" not in self.__dict__:
+            self._step = jax.jit(self.iteration)
+        return self._step
 
     def open_model(self, state: MpcState):
         w = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
         return quantize.dequantize(w, self.cfg.lw)
+
+
+@partial(jax.jit, static_argnames=("mb", "iters", "history"))
+def _mpc_scan(mb: MpcBaseline, key, state: MpcState, iters: int,
+              history: bool):
+    """lax.scan over MPC-baseline iterations (mirror of
+    protocol._scan_iterations; `mb` is static, hashed by identity)."""
+
+    def body(st, t):
+        st = mb.iteration(jax.random.fold_in(key, t), st)
+        return st, (mb.open_model(st) if history else None)
+
+    return jax.lax.scan(body, state, jnp.arange(iters))

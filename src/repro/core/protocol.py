@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Sequence
 
@@ -295,9 +296,9 @@ class Copml:
 
     # ------------------------------------------------------------------ train
 
-    def train_jit(self, key, client_xs, client_ys, iters: int,
-                  subset: Sequence[int] | None = None,
-                  history: bool = False) -> tuple:
+    def _train_jit(self, key, client_xs, client_ys, iters: int,
+                   subset: Sequence[int] | None = None,
+                   history: bool = False) -> tuple:
         """Run setup + `iters` GD iterations as ONE compiled lax.scan.
 
         The whole training loop is a single XLA program (one compile, one
@@ -318,9 +319,9 @@ class Copml:
         w = self.open_model(state)
         return (state, w, hist) if history else (state, w)
 
-    def train_eager(self, key, client_xs, client_ys, iters: int,
-                    subset: Sequence[int] | None = None,
-                    callback=None) -> tuple:
+    def _train_eager(self, key, client_xs, client_ys, iters: int,
+                     subset: Sequence[int] | None = None,
+                     callback=None) -> tuple:
         """Reference trainer: Python loop, one jitted iteration per step.
 
         Kept as the ground truth the scan engine is verified against
@@ -344,13 +345,59 @@ class Copml:
         callbacks no longer force a host round-trip every iteration.
         """
         if callback is None:
-            return self.train_jit(key, client_xs, client_ys, iters,
-                                  subset=subset)
-        state, w, hist = self.train_jit(key, client_xs, client_ys, iters,
-                                        subset=subset, history=True)
+            return self._train_jit(key, client_xs, client_ys, iters,
+                                   subset=subset)
+        state, w, hist = self._train_jit(key, client_xs, client_ys, iters,
+                                         subset=subset, history=True)
         for t in range(iters):
             callback(t, hist[t])
         return state, w
+
+    # -------------------------------------------- deprecated engine methods
+    #
+    # The train_* method zoo is superseded by the repro.api facade:
+    # api.fit(workload, "copml", engine) with engine in
+    # {"eager", "jit", "sharded"}.  The shims below delegate through the
+    # api engine dispatcher (run_copml_engine) -- the exact code path the
+    # facade runs -- so shim-vs-facade parity is structural and
+    # regression-tested (tests/test_api.py).
+
+    def _deprecated(self, engine_label: str):
+        warnings.warn(
+            f"Copml.train_{engine_label} is deprecated; use "
+            f"repro.api.fit(workload, 'copml', engine='{engine_label}') "
+            f"(see docs/API.md)", DeprecationWarning, stacklevel=3)
+        from ..api.protocols import run_copml_engine
+        return run_copml_engine
+
+    def train_jit(self, key, client_xs, client_ys, iters: int,
+                  subset: Sequence[int] | None = None,
+                  history: bool = False) -> tuple:
+        """Deprecated shim for the scan engine (api engine='jit')."""
+        run = self._deprecated("jit")
+        state, w, hist = run(self, "jit", key, client_xs, client_ys,
+                             int(iters), subset=subset, history=history)
+        return (state, w, hist) if history else (state, w)
+
+    def train_eager(self, key, client_xs, client_ys, iters: int,
+                    subset: Sequence[int] | None = None,
+                    callback=None) -> tuple:
+        """Deprecated shim for the eager engine (api engine='eager')."""
+        run = self._deprecated("eager")
+        state, w, _ = run(self, "eager", key, client_xs, client_ys,
+                          int(iters), subset=subset, callback=callback)
+        return state, w
+
+    def train_sharded(self, key, client_xs, client_ys, iters: int,
+                      mesh=None, subset: Sequence[int] | None = None,
+                      history: bool = False) -> tuple:
+        """Deprecated shim for the mesh engine (api engine='sharded')."""
+        from ..api.engine import EngineSpec
+        run = self._deprecated("sharded")
+        spec = EngineSpec("sharded", mesh=mesh)
+        state, w, hist = run(self, spec, key, client_xs, client_ys,
+                             int(iters), subset=subset, history=history)
+        return (state, w, hist) if history else (state, w)
 
     def open_model(self, state: CopmlState):
         """Reconstruct and dequantize the model (only done at the end /
@@ -360,10 +407,10 @@ class Copml:
 
     # ----------------------------------------------------- distributed engine
 
-    def train_sharded(self, key, client_xs, client_ys, iters: int,
-                      mesh=None, subset: Sequence[int] | None = None,
-                      history: bool = False) -> tuple:
-        """train_jit with the client axis PHYSICALLY sharded over a mesh.
+    def _train_sharded(self, key, client_xs, client_ys, iters: int,
+                       mesh=None, subset: Sequence[int] | None = None,
+                       history: bool = False) -> tuple:
+        """_train_jit with the client axis PHYSICALLY sharded over a mesh.
 
         Every share/coded array is split over a 1-D ("clients",) mesh
         (meshutil.client_mesh) with shard_map, so each device holds only its

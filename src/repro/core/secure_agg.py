@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Sequence
 
 import jax
@@ -127,3 +128,100 @@ def secure_aggregate(key, grads_per_client, cfg: SecureAggConfig,
     sum_shares = jax.vmap(aggregate_shares)(per_holder)   # (holder, L)
     mean = decode_mean(keys[-1], sum_shares, cfg, subset)
     return unflatten_grads(mean, metas[0])
+
+
+# --------------------------------------------- secure-agg logistic regression
+#
+# The paper's comparison workload trained with gradient privacy ONLY: each
+# client computes its local float gradient in the clear, and the exchange
+# is COPML-coded secure aggregation (the degree-1 slice of the paper's
+# technique).  The model itself is public every step -- a deliberately
+# weaker trust model than full COPML, priced as the "secure_agg" protocol
+# of the repro.api registry.
+
+
+def _padded_clients(client_xs, client_ys):
+    """Stack ragged per-client rows into (N, mmax, d) + a row mask."""
+    n = len(client_xs)
+    sizes = [int(np.asarray(x).shape[0]) for x in client_xs]
+    mmax, d = max(sizes), int(np.asarray(client_xs[0]).shape[1])
+    xs = np.zeros((n, mmax, d), np.float32)
+    ys = np.zeros((n, mmax), np.float32)
+    mask = np.zeros((n, mmax), np.float32)
+    for j, (x, y) in enumerate(zip(client_xs, client_ys)):
+        xs[j, : sizes[j]] = np.asarray(x, np.float32)
+        ys[j, : sizes[j]] = np.asarray(y, np.float32)
+        mask[j, : sizes[j]] = 1.0
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
+
+
+def _client_mean_grads(xs, ys, mask, w):
+    """(N, d) per-client MEAN logistic gradients over the padded rows."""
+    z = jnp.einsum("nmd,d->nm", xs, w)
+    err = (jax.nn.sigmoid(z) - ys) * mask
+    g = jnp.einsum("nmd,nm->nd", xs, err)
+    return g / jnp.sum(mask, axis=1, keepdims=True)
+
+
+def _secure_mean_step(key, g, cfg: SecureAggConfig, subset):
+    """One aggregation round on (N, d) gradients: the same key schedule and
+    field ops as secure_aggregate over [{'g': g[j]}] pytrees."""
+    keys = jax.random.split(key, cfg.n_clients + 1)
+    shares = jax.vmap(lambda k, gj: encode_local(k, gj, cfg))(
+        keys[: cfg.n_clients], g)                        # (owner, holder, d)
+    per_holder = jnp.swapaxes(shares, 0, 1)
+    sum_shares = jax.vmap(aggregate_shares)(per_holder)
+    return decode_mean(keys[cfg.n_clients], sum_shares, cfg, subset)
+
+
+def secure_logreg(key, client_xs, client_ys, cfg: SecureAggConfig,
+                  eta: float, iters: int,
+                  subset: Sequence[int] | None = None, callback=None):
+    """Eager engine: Python loop, one secure_aggregate round per GD step.
+
+    Each step j's local gradient is the client's mean gradient, so the
+    decoded mean-of-means equals the full-batch gradient (up to split
+    raggedness).  Returns the final float model (d,)."""
+    cfg.validate()
+    xs, ys, mask = _padded_clients(client_xs, client_ys)
+    w = jnp.zeros((xs.shape[2],), jnp.float32)
+    for t in range(iters):
+        g = _client_mean_grads(xs, ys, mask, w)
+        grads = [{"g": g[j]} for j in range(cfg.n_clients)]
+        mean = secure_aggregate(jax.random.fold_in(key, t), grads, cfg,
+                                subset)
+        w = w - eta * mean["g"].astype(jnp.float32)
+        if callback is not None:
+            callback(t, np.asarray(w))
+    return np.asarray(w)
+
+
+def secure_logreg_scan(key, client_xs, client_ys, cfg: SecureAggConfig,
+                       eta: float, iters: int,
+                       subset: Sequence[int] | None = None,
+                       history: bool = True):
+    """jit engine: the whole loop as one compiled lax.scan.
+
+    Same per-step fold_in key schedule and the same share/decode field ops
+    as the eager loop (the aggregation rounds are bit-identical; only the
+    float gradient einsum may differ in summation order).  Returns
+    (w, history (iters, d) or None)."""
+    cfg.validate()
+    xs, ys, mask = _padded_clients(client_xs, client_ys)
+    subset = None if subset is None else tuple(subset)
+    w, hist = _secure_logreg_jit(key, xs, ys, mask, cfg, float(eta),
+                                 int(iters), subset, bool(history))
+    return np.asarray(w), (None if hist is None else np.asarray(hist))
+
+
+@partial(jax.jit, static_argnames=("cfg", "eta", "iters", "subset",
+                                   "history"))
+def _secure_logreg_jit(key, xs, ys, mask, cfg, eta, iters, subset, history):
+    def body(w, t):
+        g = _client_mean_grads(xs, ys, mask, w)
+        mean = _secure_mean_step(jax.random.fold_in(key, t), g, cfg, subset)
+        w = w - eta * mean.astype(jnp.float32)
+        return w, (w if history else None)
+
+    return jax.lax.scan(body, jnp.zeros((xs.shape[2],), jnp.float32),
+                        jnp.arange(iters))

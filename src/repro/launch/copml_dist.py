@@ -15,9 +15,9 @@ Run it for real on a CPU host (flag must precede the first jax import):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.copml_dist --devices 8 --clients 13 --iters 5
 
-which trains sharded, re-trains on one device with train_jit, and asserts
-the two are bit-exact.  --bench prints the CSV rows benchmarks/run.py's
-`distributed` stage records.
+which trains api.fit(..., engine="sharded") over the mesh, re-trains on one
+device with engine="jit", and asserts the two are bit-exact.  --bench
+prints the CSV rows benchmarks/run.py's `distributed` stage records.
 
 Dry-run cells (invoked from launch/dryrun.py for --arch copml-logreg) lower
 and compile ONE real sharded iteration -- collectives and all -- on the
@@ -34,7 +34,6 @@ workloads:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -61,15 +60,18 @@ _SHAPE_MAP = {
 FIELD_MAC_FLOPS = 16.0
 
 
-def make_protocol(n: int, m: int, d: int) -> Copml:
+def make_config(n: int, m: int, d: int) -> CopmlConfig:
     k, t = case2_params(n)
     # The truncation depth k1 = 2*lx + cb + log2(m/eta) must stay below
     # log2(p): with the paper's 26-bit field, m beyond ~2^14 forces either
     # coarser quantization or a larger step size.  We scale eta with m
     # (documented scalability limit of the 26-bit field, EXPERIMENTS.md).
     eta = max(1.0, m / 4096.0)
-    cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=eta)
-    return Copml(cfg, m, d)
+    return CopmlConfig(n_clients=n, k=k, t=t, eta=eta)
+
+
+def make_protocol(n: int, m: int, d: int) -> Copml:
+    return Copml(make_config(n, m, d), m, d)
 
 
 def flatten_mesh(mesh):
@@ -143,61 +145,59 @@ def dryrun_cell(shape_name: str, mesh, multi_pod: bool) -> dict:
 
 
 def _workload(args):
-    from ..data import pipeline
-    x, y = pipeline.classification_dataset(m=args.m, d=args.d, seed=0,
-                                           margin=2.0)
-    proto = make_protocol(args.clients, args.m, args.d)
-    cx, cy = pipeline.split_clients(x, y, args.clients)
-    return proto, cx, cy
+    """Ad-hoc api workload for the CLI's (m, d, clients) arguments."""
+    from .. import api
+    return api.Workload(
+        name=f"cli_m{args.m}_d{args.d}_n{args.clients}", m=args.m, d=args.d,
+        cfg=make_config(args.clients, args.m, args.d), iters=args.iters)
 
 
 def run_parity(args) -> None:
-    """Train sharded on the client mesh, re-train single-device, compare."""
-    proto, cx, cy = _workload(args)
-    cfg = proto.cfg
+    """Train sharded on the client mesh, re-train single-device, compare.
+
+    Both runs go through api.fit -- the same facade path every other
+    driver uses; only the engine axis differs."""
+    from .. import api
+    wl = _workload(args)
+    cfg = wl.cfg
     mesh = meshutil.client_mesh(args.devices)
     print(f"COPML distributed: N={cfg.n_clients} clients over "
           f"{mesh.size} devices, K={cfg.k} T={cfg.t} "
           f"R={cfg.recovery_threshold}, {args.iters} iterations")
-    key = jax.random.PRNGKey(args.seed)
-    t0 = time.perf_counter()
-    st_s, w_s = proto.train_sharded(key, cx, cy, args.iters, mesh=mesh)
-    jax.block_until_ready(w_s)
-    dt_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    st_j, w_j = proto.train_jit(key, cx, cy, args.iters)
-    jax.block_until_ready(w_j)
-    dt_j = time.perf_counter() - t0
-    np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w_j))
-    np.testing.assert_array_equal(np.asarray(st_s.w_shares),
-                                  np.asarray(st_j.w_shares))
-    print(f"bit-exact: sharded == train_jit  "
-          f"(sharded {dt_s:.2f}s incl. compile, single {dt_j:.2f}s)")
+    res_s = api.fit(wl, "copml", api.EngineSpec("sharded", mesh=mesh),
+                    key=args.seed, iters=args.iters, history=False)
+    res_j = api.fit(wl, "copml", "jit", key=args.seed, iters=args.iters,
+                    history=False)
+    np.testing.assert_array_equal(res_s.weights, res_j.weights)
+    np.testing.assert_array_equal(np.asarray(res_s.state.w_shares),
+                                  np.asarray(res_j.state.w_shares))
+    print(f"bit-exact: sharded == jit  "
+          f"(sharded {res_s.wall_time_s:.2f}s incl. compile, "
+          f"single {res_j.wall_time_s:.2f}s)")
 
 
 def run_bench(args, report=print) -> None:
     """Sharded-vs-single-device wall time, interleaved best-of-reps
     (both warm; virtual CPU devices share the host's cores, so this
     measures protocol+collective overhead, not real multi-chip scaling)."""
-    proto, cx, cy = _workload(args)
+    from .. import api
+    wl = _workload(args)
     mesh = meshutil.client_mesh(args.devices)
-    key = jax.random.PRNGKey(args.seed)
-    runners = (
-        ("train_jit_1dev", lambda: proto.train_jit(key, cx, cy, args.iters)),
-        (f"train_sharded_{mesh.size}dev",
-         lambda: proto.train_sharded(key, cx, cy, args.iters, mesh=mesh)),
-    )
+    engines = (("train_jit_1dev", "jit"),
+               (f"train_sharded_{mesh.size}dev",
+                api.EngineSpec("sharded", mesh=mesh)))
     best = {}
-    for name, fn in runners:                    # compile + warm
-        jax.block_until_ready(fn()[1])
+    for name, eng in engines:                   # compile + warm
+        api.fit(wl, "copml", eng, key=args.seed, iters=args.iters,
+                history=False)
         best[name] = float("inf")
     for _ in range(args.reps):                  # interleaved best-of-reps
-        for name, fn in runners:
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn()[1])
-            best[name] = min(best[name], time.perf_counter() - t0)
-    base = best[runners[0][0]]
-    for name, _ in runners:
+        for name, eng in engines:
+            res = api.fit(wl, "copml", eng, key=args.seed, iters=args.iters,
+                          history=False)
+            best[name] = min(best[name], res.wall_time_s)
+    base = best[engines[0][0]]
+    for name, _ in engines:
         dt = best[name]
         report(f"copml_dist/{name}_{args.iters}it,{dt * 1e6:.1f},"
                f"{base / dt:.2f}x_vs_1dev")

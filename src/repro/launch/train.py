@@ -5,6 +5,12 @@
 
 Uses the reduced (smoke) config by default on CPU hosts; pass --full for the
 assigned production config (sized for the v5e meshes, see launch/dryrun.py).
+
+The paper's own workload is an arch too: `--arch copml-logreg` routes
+through the repro.api facade (one front door for every experiment):
+
+    PYTHONPATH=src python -m repro.launch.train --arch copml-logreg \
+        --workload quickstart --protocol copml --engine jit
 """
 
 from __future__ import annotations
@@ -21,8 +27,13 @@ from . import mesh as mesh_lib
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m",
-                    choices=[a for a in registry.ARCH_IDS
-                             if a != "copml-logreg"])
+                    choices=list(registry.ARCH_IDS))
+    # copml-logreg only: the (workload, protocol, engine) run triple
+    ap.add_argument("--workload", default="quickstart")
+    ap.add_argument("--protocol", default="copml")
+    ap.add_argument("--engine", default="jit")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="copml-logreg GD iterations (default: workload's)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -33,6 +44,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
+
+    if args.arch == "copml-logreg":
+        from .. import api
+        res = api.fit(args.workload, args.protocol, args.engine,
+                      iters=args.iters)
+        print(res.summary())
+        return
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.smoke_config(args.arch))

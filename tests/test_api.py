@@ -1,0 +1,275 @@
+"""repro.api facade: the (workload, protocol, engine) axes.
+
+The copml goldens below were produced by the PRE-refactor
+Copml.train_jit / train_sharded (commit e179bb5, before the api layer
+existed) on the smoke workload -- the facade must reproduce them
+bit-for-bit through every engine.
+"""
+
+import hashlib
+import importlib
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import secure_agg as sa
+from repro.core.baselines import MpcBaseline
+from repro.core.protocol import Copml
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# smoke workload, key=PRNGKey(0), 10 iterations (pre-refactor outputs)
+GOLDEN_W = [0.25, -0.375, 0.375, 0.5, -0.125, 0.25, 0.875, 1.25, -0.5,
+            -1.125, -0.5, 0.125]
+GOLDEN_SHARES_SHA = \
+    "459aaa671b3d6708b4918f1e54b29e083cecf6c85b5b617f882720596399afaf"
+GOLDEN_HIST_SHA = \
+    "343e87b79c6ece3608774a43160dccbb80ef214111bdb0f9f9c066ead77f9e80"
+
+
+def _sha(arr, dtype):
+    return hashlib.sha256(np.asarray(arr, dtype).tobytes()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def copml_jit():
+    return api.fit("smoke", "copml", "jit", key=0, iters=10, history=True)
+
+
+# --------------------------------------------------- copml engine bit-exact
+
+
+def test_copml_jit_matches_prerefactor_golden(copml_jit):
+    res = copml_jit
+    np.testing.assert_array_equal(
+        np.asarray(res.weights, np.float64), np.asarray(GOLDEN_W))
+    assert _sha(res.state.w_shares, np.int32) == GOLDEN_SHARES_SHA
+    assert _sha(res.history, np.float32) == GOLDEN_HIST_SHA
+    assert res.triple == ("smoke", "copml", "jit")
+
+
+def test_copml_eager_bit_exact_vs_jit(copml_jit):
+    res = api.fit("smoke", "copml", "eager", key=0, iters=10, history=True)
+    np.testing.assert_array_equal(res.weights, copml_jit.weights)
+    np.testing.assert_array_equal(res.history, copml_jit.history)
+    np.testing.assert_array_equal(np.asarray(res.state.w_shares),
+                                  np.asarray(copml_jit.state.w_shares))
+
+
+def test_copml_sharded_matches_prerefactor_golden(copml_jit):
+    """The shard_map engine on a 1-device mesh (multi-device parity is the
+    slow subprocess test in test_distributed.py)."""
+    res = api.fit("smoke", "copml", api.EngineSpec("sharded", devices=1),
+                  key=0, iters=10, history=False)
+    np.testing.assert_array_equal(res.weights, copml_jit.weights)
+    assert _sha(res.state.w_shares, np.int32) == GOLDEN_SHARES_SHA
+    assert res.engine == "sharded:1"
+
+
+# ------------------------------------------------- all protocols, both ways
+
+
+@pytest.mark.parametrize("protocol", ["copml", "mpc_baseline", "float",
+                                      "poly_float", "secure_agg"])
+def test_protocol_runs_on_eager_and_jit(protocol):
+    """Acceptance grid: 5 protocols x {eager, jit}, one TrainResult schema."""
+    results = {}
+    for engine in ("eager", "jit"):
+        res = api.fit("smoke", protocol, engine, key=0, iters=5)
+        assert res.triple == ("smoke", protocol, engine)
+        assert res.weights.shape == (12,)
+        assert res.history.shape == (5, 12)
+        assert res.accuracy.shape == (5,)
+        assert 0.0 <= res.final_accuracy <= 1.0
+        assert res.wall_time_s > 0
+        assert res.iters == 5
+        results[engine] = res
+    # engines agree on what they computed (bit-exact for the field
+    # protocols, float32-vs-float64 tolerance for the float paths)
+    np.testing.assert_allclose(results["eager"].weights,
+                               results["jit"].weights, atol=1e-5)
+    # the secured protocols learn the same task: accuracy in family
+    assert abs(results["eager"].final_accuracy
+               - results["jit"].final_accuracy) <= 0.05
+
+
+def test_cost_model_attached_per_protocol():
+    res_c = api.fit("smoke", "copml", "jit", key=0, iters=5, history=False)
+    assert set(res_c.cost) == {"comm_s", "comp_s", "enc_s", "total_s"}
+    res_f = api.fit("smoke", "float", "jit", key=0, iters=5, history=False)
+    assert res_f.cost is None and res_f.history is None
+    # Table I ordering (a PAPER-scale property: at smoke scale the fixed
+    # dataset-sharing term dominates): baseline comm >> COPML comm.  The
+    # cost models run on shapes only -- no training needed.
+    wl = api.get_workload("cifar10_case2")
+    cost_c = api.PROTOCOLS["copml"].cost(wl, 50)
+    cost_m = api.PROTOCOLS["mpc_baseline"].cost(wl, 50)
+    assert cost_m["comm_s"] > cost_c["comm_s"]
+    assert cost_m["total_s"] > cost_c["total_s"]
+
+
+# ------------------------------------------------------- deprecation shims
+
+
+def test_train_method_shims_warn_and_match_facade():
+    wl = api.get_workload("smoke")
+    proto = Copml(wl.cfg, wl.m, wl.d)
+    cx, cy = wl.client_data()
+    key = jax.random.PRNGKey(0)
+    res = api.fit("smoke", "copml", "jit", key=0, iters=3, history=False)
+
+    with pytest.warns(DeprecationWarning, match="train_jit is deprecated"):
+        st_j, w_j = proto.train_jit(key, cx, cy, 3)
+    with pytest.warns(DeprecationWarning, match="train_eager is deprecated"):
+        st_e, w_e = proto.train_eager(key, cx, cy, 3)
+    with pytest.warns(DeprecationWarning,
+                      match="train_sharded is deprecated"):
+        st_s, w_s = proto.train_sharded(key, cx, cy, 3,
+                                        mesh=None)  # all (1) visible devices
+    for w, st in ((w_j, st_j), (w_e, st_e), (w_s, st_s)):
+        np.testing.assert_array_equal(np.asarray(w), res.weights)
+        np.testing.assert_array_equal(np.asarray(st.w_shares),
+                                      np.asarray(res.state.w_shares))
+
+
+# --------------------------------------- baselines routed through the api
+
+
+def test_mpc_baseline_api_matches_direct_call():
+    wl = api.get_workload("smoke")
+    x, y, _, _ = wl.data()
+    mb = MpcBaseline(wl.cfg, wl.m, wl.d, groups=3)
+    _, w_direct = mb.train(jax.random.PRNGKey(0), x, y, 5)
+
+    res_e = api.fit("smoke", "mpc_baseline", "eager", key=0, iters=5)
+    res_j = api.fit("smoke", "mpc_baseline", "jit", key=0, iters=5)
+    # same key schedule end-to-end: the facade IS the direct call
+    np.testing.assert_array_equal(np.asarray(w_direct), res_e.weights)
+    np.testing.assert_array_equal(res_e.weights, res_j.weights)
+    assert abs(res_e.final_accuracy - res_j.final_accuracy) < 1e-9
+
+
+def test_secure_agg_api_matches_direct_call():
+    """api.fit('secure_agg') == a hand-rolled loop over
+    secure_agg.secure_aggregate with the same per-step fold_in schedule."""
+    wl = api.get_workload("smoke")
+    cx, cy = wl.client_data()
+    cfg = sa.SecureAggConfig(n_clients=wl.n_clients, t=wl.cfg.t)
+    xs, ys, mask = sa._padded_clients(cx, cy)
+    key = jax.random.PRNGKey(0)
+    w = np.zeros(wl.d, np.float32)
+    for t in range(5):
+        g = np.asarray(sa._client_mean_grads(xs, ys, mask, w))
+        grads = [{"g": g[j]} for j in range(cfg.n_clients)]
+        mean = sa.secure_aggregate(jax.random.fold_in(key, t), grads, cfg)
+        w = w - wl.cfg.eta * np.asarray(mean["g"], np.float32)
+
+    res_e = api.fit("smoke", "secure_agg", "eager", key=0, iters=5)
+    res_j = api.fit("smoke", "secure_agg", "jit", key=0, iters=5)
+    np.testing.assert_allclose(res_e.weights, w, atol=1e-6)
+    np.testing.assert_allclose(res_j.weights, w, atol=1e-5)
+    assert abs(res_e.final_accuracy - res_j.final_accuracy) <= 0.05
+
+
+# ----------------------------------------------------- axes and registries
+
+
+def test_engine_spec_parsing():
+    assert api.parse_engine("eager").kind == "eager"
+    assert api.parse_engine("jit").label == "jit"
+    sp = api.parse_engine("sharded:4")
+    assert (sp.kind, sp.devices) == ("sharded", 4)
+    from repro.core import meshutil
+    mesh = meshutil.client_mesh(1)
+    sp = api.parse_engine(mesh)                    # a Mesh IS an engine spec
+    assert sp.kind == "sharded" and sp.resolve_mesh() is mesh
+    assert sp.label == "sharded:1"
+    with pytest.raises(ValueError):
+        api.parse_engine("warp")
+    with pytest.raises(ValueError):
+        api.parse_engine("jit:4")
+    with pytest.raises(ValueError):
+        api.EngineSpec("jit", devices=4)
+
+
+def test_workload_registry():
+    names = api.workload_names()
+    for expected in ("smoke", "quickstart", "cifar10_like", "gisette_like",
+                     "cifar10_case1", "cifar10_case2", "gisette_case1",
+                     "pod512", "smoke_straggler", "engine_micro"):
+        assert expected in names, expected
+    wl = api.get_workload("cifar10_case1")         # paper Section V-A shape
+    assert (wl.m, wl.d, wl.n_clients) == (9019, 3073, 50)
+    assert wl.cfg.eta == 1.0                       # paper eta fits the field
+    # every registered workload must be constructible as a COPML driver
+    # (pod512's eta is auto-scaled so the truncation depth fits 26 bits)
+    for name in api.workload_names():
+        Copml(api.get_workload(name).cfg, api.get_workload(name).m,
+              api.get_workload(name).d)
+    assert api.WORKLOADS["smoke"] is api.get_workload("smoke")
+    with pytest.raises(KeyError, match="unknown workload"):
+        api.get_workload("nope")
+    # eval split plumbing: *_like workloads hold out test rows
+    x, y, xt, yt = api.get_workload("cifar10_like").data()
+    assert x.shape == (480, 96) and xt.shape == (160, 96)
+    # ad-hoc instances pass straight through fit's resolution
+    assert api.get_workload("smoke").client_data()[0][0].shape[1] == 12
+
+
+def test_protocol_registry_and_validation():
+    assert api.protocol_names() == ("copml", "float", "mpc_baseline",
+                                    "poly_float", "secure_agg")
+    with pytest.raises(KeyError, match="unknown protocol"):
+        api.fit("smoke", "quantum", "jit")
+    with pytest.raises(ValueError, match="supports engines"):
+        api.fit("smoke", "float", "sharded")       # sharded is copml-only
+    # a straggler subset on a protocol without subset decoding is an
+    # error, not a silently-ignored argument
+    with pytest.raises(ValueError, match="straggler-subset"):
+        api.fit("smoke", "float", "jit", subset=(0, 1, 2))
+    with pytest.raises(ValueError, match="straggler-subset"):
+        api.fit("smoke_straggler", "mpc_baseline", "jit")
+
+
+def test_straggler_subset_workload():
+    """smoke_straggler's default subset (last R clients) trains the same
+    model as the first-R subset -- recovery threshold via the facade."""
+    res_last = api.fit("smoke_straggler", "copml", "jit", key=0)
+    res_first = api.fit("smoke_straggler", "copml", "jit", key=0,
+                        subset=tuple(range(10)))
+    np.testing.assert_array_equal(res_last.weights, res_first.weights)
+
+
+# ----------------------------------------------------------- cli + harness
+
+
+def test_cli_list_and_fit(capsys):
+    from repro.api import cli
+    cli.main(["--list"])
+    out = capsys.readouterr().out
+    assert "copml" in out and "sharded" in out and "smoke" in out
+    cli.main(["smoke", "--protocol", "float", "--engine", "jit",
+              "--iters", "5"])
+    out = capsys.readouterr().out
+    assert "smoke x float x jit" in out
+
+
+def test_benchmark_stage_registry():
+    """benchmarks/run.py discovers stages from a registry and stamps every
+    row with its (workload, protocol, engine) triple."""
+    if _REPO not in sys.path:
+        sys.path.insert(0, _REPO)
+    brun = importlib.import_module("benchmarks.run")
+    stages = brun.build_stages()
+    assert set(stages) >= {"kernel", "engine", "distributed", "fig3",
+                           "fig4", "table1", "table2", "roofline"}
+    for s in stages.values():
+        assert len(s.triple) == 3, s
+        assert s.doc
+    # unknown stage names are an error, not silently skipped
+    with pytest.raises(SystemExit):
+        brun.main(["--stage", "nope"])

@@ -39,7 +39,10 @@ class EngineSpec:
         if self.kind not in ENGINES:
             raise ValueError(
                 f"unknown engine kind {self.kind!r}; expected one of {ENGINES}")
-        if self.kind != "sharded" and (self.devices or self.mesh is not None):
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.kind != "sharded" and (self.devices is not None
+                                       or self.mesh is not None):
             raise ValueError(f"engine {self.kind!r} takes no mesh/devices")
 
     @property
@@ -49,7 +52,7 @@ class EngineSpec:
             return self.kind
         if self.mesh is not None:
             return f"sharded:{self.mesh.size}"
-        return f"sharded:{self.devices}" if self.devices else "sharded"
+        return "sharded" if self.devices is None else f"sharded:{self.devices}"
 
     def resolve_mesh(self):
         """The 1-D client mesh this spec runs on (sharded only)."""

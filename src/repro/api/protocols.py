@@ -67,7 +67,9 @@ def fit(workload, protocol: str = "copml", engine="jit", *, key=0,
     engine:   "eager" | "jit" | "sharded[:N]" | EngineSpec | jax Mesh.
     key:      int seed or jax PRNGKey.
     iters:    GD iterations (None = the workload's default).
-    subset:   straggler decode subset (None = the workload's default).
+    subset:   straggler decode subset.  None inherits the workload's
+              default (subset-capable protocols only); "all" or () forces
+              full decode even when the workload has a default subset.
     history:  keep the per-step opened-model trajectory + accuracy curve.
     """
     return get(protocol).fit(workload, engine, key=key, iters=iters,
@@ -96,11 +98,21 @@ class Protocol:
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
         iters = wl.iters if iters is None else int(iters)
-        subset = wl.subset if subset is None else tuple(subset)
+        if subset is None:
+            # the workload default only applies where it means something
+            subset = wl.subset if self.supports_subset else None
+        elif isinstance(subset, str):
+            if subset != "all":
+                raise ValueError(f"subset must be None, 'all', or an "
+                                 f"iterable of client indices; got "
+                                 f"{subset!r}")
+            subset = None                     # force full decode
+        else:
+            subset = tuple(subset) or None    # () also means full decode
         if subset is not None and not self.supports_subset:
             raise ValueError(
                 f"protocol {self.name!r} has no straggler-subset decoding; "
-                f"drop the subset (workload or argument)")
+                f"drop the subset argument")
 
         t0 = time.perf_counter()
         w, hist, state = self._run(wl, spec, key, iters, subset, history)
@@ -143,11 +155,14 @@ def _stack_history(rows, d: int):
 
 def _history_recorder(history: bool):
     """(rows, callback) for the eager engines: the callback appends each
-    step's opened model to rows; both are None when history is off."""
+    step's opened model to rows; both are None when history is off.  The
+    copy matters: the numpy trainers (float_logreg et al.) update w in
+    place, so an np.asarray view would alias every row to the final
+    model."""
     if not history:
         return None, None
     rows: list = []
-    return rows, lambda t, w: rows.append(np.asarray(w))
+    return rows, lambda t, w: rows.append(np.array(w, copy=True))
 
 
 # ------------------------------------------------------------------ copml
@@ -164,11 +179,11 @@ def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
     spec = engine_mod.parse(spec)
     subset = None if subset is None else tuple(subset)
     if spec.kind == "eager":
-        hist_rows = [] if history else None
+        hist_rows, rec = _history_recorder(history)
 
         def cb(t, w):
-            if hist_rows is not None:
-                hist_rows.append(np.asarray(w))
+            if rec is not None:
+                rec(t, w)
             if callback is not None:
                 callback(t, w)
 

@@ -11,15 +11,13 @@ import dataclasses
 
 import numpy as np
 
-
-def _sigmoid(z):
-    return 1.0 / (1.0 + np.exp(-z))
+from ..core.baselines import sigmoid
 
 
 def accuracy_of(w, x, y) -> float:
     """Binary accuracy of model w on (x, y)."""
     z = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
-    return float(((_sigmoid(z) > 0.5) == np.asarray(y)).mean())
+    return float(((sigmoid(z) > 0.5) == np.asarray(y)).mean())
 
 
 def accuracy_curve(history, x, y) -> np.ndarray:

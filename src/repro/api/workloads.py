@@ -68,7 +68,12 @@ def _dataset(m, d, seed, margin, test_m):
     if key not in _DATA_CACHE:
         out = pipeline.classification_dataset(m=m, d=d, seed=seed,
                                               margin=margin, test_m=test_m)
-        _DATA_CACHE[key] = out if test_m else (out[0], out[1], None, None)
+        if not test_m:
+            out = (out[0], out[1], None, None)
+        for arr in out:                 # the cache is shared across fits:
+            if arr is not None:         # freeze so no caller can corrupt it
+                arr.flags.writeable = False
+        _DATA_CACHE[key] = out
     return _DATA_CACHE[key]
 
 
@@ -124,7 +129,7 @@ register(Workload("gisette_like", m=480, d=128,
 register(Workload("smoke_straggler", m=96, d=12, cfg=_cfg(13, 3, 1), iters=4,
                   subset=tuple(range(3, 13))))
 
-def _field_safe_cfg(cfg: CopmlConfig, m: int) -> CopmlConfig:
+def _field_safe_cfg(cfg: CopmlConfig, m: int, name: str) -> CopmlConfig:
     """Keep the paper's eta when the derived truncation depth fits the
     26-bit field; otherwise apply the documented eta-with-m scaling (the
     field-size scalability limit, same rule as copml_dist.make_config) so
@@ -133,11 +138,18 @@ def _field_safe_cfg(cfg: CopmlConfig, m: int) -> CopmlConfig:
         derive_update_constants(cfg, m)
         return cfg
     except AssertionError:
-        return dataclasses.replace(cfg, eta=max(cfg.eta, m / 4096.0))
+        bumped = dataclasses.replace(cfg, eta=max(cfg.eta, m / 4096.0))
+    try:
+        derive_update_constants(bumped, m)
+    except AssertionError as exc:
+        raise ValueError(
+            f"workload {name!r} (m={m}, cfg={cfg}) does not fit the 26-bit "
+            f"field even after eta scaling to {bumped.eta}") from exc
+    return bumped
 
 
 # paper-scale: Section V-A shapes from configs/copml_logreg (data this size
 # is only materialized if a fit actually asks for it)
 for _w in copml_logreg.WORKLOADS.values():
     register(Workload(_w.name, m=_w.m, d=_w.d,
-                      cfg=_field_safe_cfg(_w.cfg, _w.m), iters=50))
+                      cfg=_field_safe_cfg(_w.cfg, _w.m, _w.name), iters=50))

@@ -87,11 +87,17 @@ def test_protocol_runs_on_eager_and_jit(protocol):
         assert 0.0 <= res.final_accuracy <= 1.0
         assert res.wall_time_s > 0
         assert res.iters == 5
+        # history rows are snapshots, not views of the trainer's weight
+        # buffer: the trajectory must actually move step to step
+        assert not np.array_equal(res.history[0], res.history[-1])
         results[engine] = res
     # engines agree on what they computed (bit-exact for the field
-    # protocols, float32-vs-float64 tolerance for the float paths)
+    # protocols, float32-vs-float64 tolerance for the float paths) --
+    # per step, not just at the end
     np.testing.assert_allclose(results["eager"].weights,
                                results["jit"].weights, atol=1e-5)
+    np.testing.assert_allclose(results["eager"].history,
+                               results["jit"].history, atol=1e-4)
     # the secured protocols learn the same task: accuracy in family
     assert abs(results["eager"].final_accuracy
                - results["jit"].final_accuracy) <= 0.05
@@ -194,6 +200,10 @@ def test_engine_spec_parsing():
         api.parse_engine("jit:4")
     with pytest.raises(ValueError):
         api.EngineSpec("jit", devices=4)
+    with pytest.raises(ValueError, match="devices must be >= 1"):
+        api.parse_engine("sharded:0")       # not an empty mesh
+    with pytest.raises(ValueError):
+        api.EngineSpec("jit", devices=0)    # 0 is not "unset"
 
 
 def test_workload_registry():
@@ -216,6 +226,10 @@ def test_workload_registry():
     # eval split plumbing: *_like workloads hold out test rows
     x, y, xt, yt = api.get_workload("cifar10_like").data()
     assert x.shape == (480, 96) and xt.shape == (160, 96)
+    # cached datasets are frozen -- a caller mutating them would silently
+    # corrupt every later fit of the same shape
+    with pytest.raises(ValueError, match="read-only"):
+        x[0, 0] = 1.0
     # ad-hoc instances pass straight through fit's resolution
     assert api.get_workload("smoke").client_data()[0][0].shape[1] == 12
 
@@ -227,21 +241,31 @@ def test_protocol_registry_and_validation():
         api.fit("smoke", "quantum", "jit")
     with pytest.raises(ValueError, match="supports engines"):
         api.fit("smoke", "float", "sharded")       # sharded is copml-only
-    # a straggler subset on a protocol without subset decoding is an
-    # error, not a silently-ignored argument
+    # an EXPLICIT straggler subset on a protocol without subset decoding
+    # is an error, not a silently-ignored argument ...
     with pytest.raises(ValueError, match="straggler-subset"):
         api.fit("smoke", "float", "jit", subset=(0, 1, 2))
-    with pytest.raises(ValueError, match="straggler-subset"):
-        api.fit("smoke_straggler", "mpc_baseline", "jit")
+    # ... but a workload's DEFAULT subset only binds protocols that can
+    # decode one, so smoke_straggler still fits everywhere
+    res = api.fit("smoke_straggler", "mpc_baseline", "jit", iters=2)
+    assert res.triple == ("smoke_straggler", "mpc_baseline", "jit")
+    with pytest.raises(ValueError, match="subset must be None"):
+        api.fit("smoke", "copml", "jit", subset="most")
 
 
 def test_straggler_subset_workload():
     """smoke_straggler's default subset (last R clients) trains the same
-    model as the first-R subset -- recovery threshold via the facade."""
+    model as the first-R subset -- recovery threshold via the facade --
+    and subset='all' overrides the default with a full-decode fit."""
     res_last = api.fit("smoke_straggler", "copml", "jit", key=0)
     res_first = api.fit("smoke_straggler", "copml", "jit", key=0,
                         subset=tuple(range(10)))
     np.testing.assert_array_equal(res_last.weights, res_first.weights)
+    res_all = api.fit("smoke_straggler", "copml", "jit", key=0,
+                      subset="all")
+    res_empty = api.fit("smoke_straggler", "copml", "jit", key=0, subset=())
+    np.testing.assert_array_equal(res_all.weights, res_empty.weights)
+    np.testing.assert_array_equal(res_all.weights, res_last.weights)
 
 
 # ----------------------------------------------------------- cli + harness

@@ -38,8 +38,8 @@ class Stage:
 def build_stages() -> dict:
     """The stage registry, in execution order (kernel feeds fig3/table1)."""
     from . import (distributed_bench, fig3_speedup, fig4_accuracy,
-                   kernel_micro, roofline_report, table1_breakdown,
-                   table2_complexity)
+                   kernel_micro, resilience_bench, roofline_report,
+                   table1_breakdown, table2_complexity)
 
     def kernel(report, ctx):
         ctx["field_macs_per_s"] = kernel_micro.run(report)
@@ -54,6 +54,10 @@ def build_stages() -> dict:
               lambda report, ctx: distributed_bench.run(report),
               ("copml_dist_cli", "copml", "sharded:8"),
               "mesh-sharded vs single-device wall time (subprocess)"),
+        Stage("resilience",
+              lambda report, ctx: resilience_bench.run(report),
+              ("smoke_straggler", "copml", "jit"),
+              "wall time under FaultPlan churn vs fault-free baseline"),
         Stage("fig4", lambda report, ctx: fig4_accuracy.run(report),
               ("fig4", "copml", "jit"),
               "accuracy parity vs plaintext (paper Fig. 4)"),

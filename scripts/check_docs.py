@@ -117,11 +117,17 @@ def check_api() -> list:
         + [("engine", n) for n in api.ENGINES]
         + [("workload", n) for n in api.workload_names()]
         + [("TrainResult field", f.name)
-           for f in dataclasses.fields(api.TrainResult)])
+           for f in dataclasses.fields(api.TrainResult)]
+        + [("fault-injection name", n)
+           for n in ("FaultPlan", "FaultPlanViolation")])
     for kind, name in names:
         if f"`{name}`" not in text:
             problems.append(f"docs/API.md: {kind} `{name}` is registered "
                             f"but undocumented")
+    # the fit(faults=...) parameter itself must be shown (not just the class)
+    if "faults=" not in text:
+        problems.append("docs/API.md: api.fit's `faults=` parameter is "
+                        "undocumented")
     return problems
 
 

@@ -21,6 +21,7 @@ migration table from the old Copml.train_* call conventions.
 
 from .engine import EAGER, ENGINES, JIT, SHARDED, EngineSpec
 from .engine import parse as parse_engine
+from .faults import FaultPlan, FaultPlanViolation
 from .protocols import PROTOCOLS, Protocol, fit, run_copml_engine
 from .protocols import names as protocol_names
 from .protocols import register as register_protocol
@@ -32,8 +33,8 @@ from .workloads import register as register_workload
 
 __all__ = [
     "EAGER", "ENGINES", "JIT", "PROTOCOLS", "SHARDED", "EngineSpec",
-    "Protocol", "TrainResult", "WORKLOADS", "Workload", "accuracy_curve",
-    "accuracy_of", "fit", "get_workload", "parse_engine", "protocol_names",
-    "register_protocol", "register_workload", "run_copml_engine",
-    "workload_names",
+    "FaultPlan", "FaultPlanViolation", "Protocol", "TrainResult",
+    "WORKLOADS", "Workload", "accuracy_curve", "accuracy_of", "fit",
+    "get_workload", "parse_engine", "protocol_names", "register_protocol",
+    "register_workload", "run_copml_engine", "workload_names",
 ]

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import argparse
 
-from . import ENGINES, PROTOCOLS, fit, workload_names
+from . import ENGINES, PROTOCOLS, FaultPlan, fit, workload_names
+from . import workloads as workloads_mod
 
 
 def main(argv=None) -> None:
@@ -24,6 +25,12 @@ def main(argv=None) -> None:
     ap.add_argument("--iters", type=int, default=None,
                     help="GD iterations (default: the workload's)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggle-p", type=float, default=None, metavar="P",
+                    help="inject a seeded FaultPlan.random churn schedule "
+                         "(per-step straggle probability; repaired to the "
+                         "protocol's recovery threshold)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --straggle-p's schedule")
     ap.add_argument("--no-history", action="store_true",
                     help="skip the per-step model history / accuracy curve")
     ap.add_argument("-v", "--verbose", action="store_true")
@@ -37,8 +44,23 @@ def main(argv=None) -> None:
         print("engines:  ", ", ".join(ENGINES))
         return
 
+    plan = None
+    if args.straggle_p is not None:
+        proto = PROTOCOLS[args.protocol]
+        if not proto.supports_faults:
+            ap.error(f"--straggle-p: protocol {args.protocol!r} has no "
+                     f"fault injection")
+        wl = workloads_mod.resolve(args.workload)
+        iters = wl.iters if args.iters is None else args.iters
+        # the SAME threshold protocol-side validation enforces
+        thr = proto.fault_threshold(wl)
+        plan = FaultPlan.random(wl.n_clients, iters, seed=args.fault_seed,
+                                straggle_p=args.straggle_p,
+                                min_available=thr)
+        print(plan.describe(thr))
+
     res = fit(args.workload, args.protocol, args.engine, key=args.seed,
-              iters=args.iters, history=not args.no_history)
+              iters=args.iters, history=not args.no_history, faults=plan)
     print(res.summary())
     if args.verbose and res.accuracy is not None:
         for t, a in enumerate(res.accuracy):

@@ -31,7 +31,9 @@ import numpy as np
 
 from ..core import baselines, cost_model, secure_agg
 from ..core.protocol import Copml
+from ..train import elastic
 from . import engine as engine_mod
+from . import faults as faults_mod
 from . import result as result_mod
 from . import workloads as workloads_mod
 
@@ -59,7 +61,7 @@ def names() -> tuple:
 
 def fit(workload, protocol: str = "copml", engine="jit", *, key=0,
         iters: int | None = None, subset=None, history: bool = True,
-        ) -> result_mod.TrainResult:
+        faults=None) -> result_mod.TrainResult:
     """Train `workload` with `protocol` on `engine`; the one front door.
 
     workload: registry name or an ad-hoc workloads.Workload instance.
@@ -71,9 +73,13 @@ def fit(workload, protocol: str = "copml", engine="jit", *, key=0,
               default (subset-capable protocols only); "all" or () forces
               full decode even when the workload has a default subset.
     history:  keep the per-step opened-model trajectory + accuracy curve.
+    faults:   a faults.FaultPlan (per-step straggler/dropout/adversary
+              schedule) replayed by the engine; validated against the
+              protocol's recovery threshold BEFORE any compute
+              (FaultPlanViolation).  Mutually exclusive with `subset`.
     """
     return get(protocol).fit(workload, engine, key=key, iters=iters,
-                             subset=subset, history=history)
+                             subset=subset, history=history, faults=faults)
 
 
 class Protocol:
@@ -86,9 +92,10 @@ class Protocol:
     name: str = "?"
     engines: tuple = ("eager", "jit")
     supports_subset: bool = False    # straggler decode subsets
+    supports_faults: bool = False    # per-step FaultPlan schedules
 
     def fit(self, workload, engine="jit", *, key=0, iters=None, subset=None,
-            history=True) -> result_mod.TrainResult:
+            history=True, faults=None) -> result_mod.TrainResult:
         wl = workloads_mod.resolve(workload)
         spec = engine_mod.parse(engine)
         if spec.kind not in self.engines:
@@ -98,24 +105,40 @@ class Protocol:
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
         iters = wl.iters if iters is None else int(iters)
-        if subset is None:
-            # the workload default only applies where it means something
-            subset = wl.subset if self.supports_subset else None
-        elif isinstance(subset, str):
-            if subset != "all":
-                raise ValueError(f"subset must be None, 'all', or an "
-                                 f"iterable of client indices; got "
-                                 f"{subset!r}")
-            subset = None                     # force full decode
+        if faults is not None:
+            if subset is not None:
+                raise ValueError(
+                    "faults= and subset= are mutually exclusive: the plan "
+                    "chooses each step's decode subset")
+            plan = self._resolve_plan(wl, iters, faults)
+            subset = None                    # the plan drives every step
         else:
-            subset = tuple(subset) or None    # () also means full decode
-        if subset is not None and not self.supports_subset:
-            raise ValueError(
-                f"protocol {self.name!r} has no straggler-subset decoding; "
-                f"drop the subset argument")
+            plan = None
+            if subset is None:
+                # the workload default only applies where it means something
+                subset = wl.subset if self.supports_subset else None
+            elif isinstance(subset, str):
+                if subset != "all":
+                    raise ValueError(f"subset must be None, 'all', or an "
+                                     f"iterable of client indices; got "
+                                     f"{subset!r}")
+                subset = None                     # force full decode
+            else:
+                subset = tuple(subset) or None    # () also means full decode
+            if subset is not None and not self.supports_subset:
+                raise ValueError(
+                    f"protocol {self.name!r} has no straggler-subset "
+                    f"decoding; drop the subset argument")
 
         t0 = time.perf_counter()
-        w, hist, state = self._run(wl, spec, key, iters, subset, history)
+        # plan is passed only when present: externally registered protocols
+        # written against the pre-fault 6-arg _run contract keep working
+        # for fault-free fits (docs/API.md extension example)
+        if plan is None:
+            w, hist, state = self._run(wl, spec, key, iters, subset, history)
+        else:
+            w, hist, state = self._run(wl, spec, key, iters, subset, history,
+                                       plan)
         w = np.asarray(jax.block_until_ready(w))
         wall = time.perf_counter() - t0
 
@@ -128,9 +151,41 @@ class Protocol:
             iters=iters, weights=w, wall_time_s=wall, history=hist,
             accuracy=acc,
             final_accuracy=result_mod.accuracy_of(w, x_eval, y_eval),
-            cost=self.cost(wl, iters), state=state)
+            cost=self.cost(wl, iters), state=state,
+            availability=None if plan is None else plan.available.copy())
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def _resolve_plan(self, wl, iters: int, faults) -> faults_mod.FaultPlan:
+        """Check a FaultPlan against this protocol and workload, truncate
+        it to the run length, and run the recovery-threshold budget check
+        -- all BEFORE any engine work (an invalid plan never compiles)."""
+        if not self.supports_faults:
+            raise ValueError(
+                f"protocol {self.name!r} has no fault injection; drop the "
+                f"faults argument")
+        if not isinstance(faults, faults_mod.FaultPlan):
+            raise TypeError(f"faults must be a FaultPlan, got "
+                            f"{type(faults).__name__}")
+        if faults.n_clients != wl.n_clients:
+            raise ValueError(
+                f"plan covers {faults.n_clients} clients; workload "
+                f"{wl.name!r} has {wl.n_clients}")
+        if faults.iters < iters:
+            raise ValueError(
+                f"plan covers {faults.iters} steps; the run needs {iters}")
+        plan = faults.slice(iters)
+        self._validate_plan(wl, plan)        # raises FaultPlanViolation
+        return plan
+
+    def fault_threshold(self, wl) -> int:
+        """The per-step availability floor a FaultPlan must keep for this
+        protocol on `wl` -- the SINGLE source both _validate_plan and
+        plan-building callers (cli --straggle-p) derive from."""
+        raise NotImplementedError            # supports_faults protocols only
+
+    def _validate_plan(self, wl, plan: faults_mod.FaultPlan):
+        raise NotImplementedError            # supports_faults protocols only
+
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         """-> (weights, history-or-None, protocol-native state)"""
         raise NotImplementedError
 
@@ -170,14 +225,17 @@ def _history_recorder(history: bool):
 
 def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
                      iters: int, subset=None, history: bool = False,
-                     callback=None):
+                     callback=None, step_subsets=None, adversaries=None):
     """THE dispatch from an EngineSpec to a Copml engine implementation.
 
     Both api.fit and the deprecated Copml.train_* shims route through
     here, so shim-vs-facade parity is structural.  Returns
-    (state, weights, history-or-None); `callback` is eager-only."""
+    (state, weights, history-or-None); `callback` is eager-only.
+    step_subsets/adversaries carry a FaultPlan's per-step decode subsets
+    and corruption mask to whichever engine runs."""
     spec = engine_mod.parse(spec)
     subset = None if subset is None else tuple(subset)
+    fault_kw = dict(step_subsets=step_subsets, adversaries=adversaries)
     if spec.kind == "eager":
         hist_rows, rec = _history_recorder(history)
 
@@ -189,17 +247,17 @@ def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
 
         state, w = proto._train_eager(
             key, client_xs, client_ys, iters, subset=subset,
-            callback=cb if (history or callback) else None)
+            callback=cb if (history or callback) else None, **fault_kw)
         return state, w, _stack_history(hist_rows, proto.d)
     if callback is not None:
         raise ValueError("callback is only supported on the eager engine")
     if spec.kind == "jit":
         out = proto._train_jit(key, client_xs, client_ys, iters,
-                               subset=subset, history=history)
+                               subset=subset, history=history, **fault_kw)
     else:
         out = proto._train_sharded(key, client_xs, client_ys, iters,
                                    mesh=spec.resolve_mesh(), subset=subset,
-                                   history=history)
+                                   history=history, **fault_kw)
     if history:
         state, w, hist = out
         return state, w, hist
@@ -211,6 +269,7 @@ class CopmlProtocol(Protocol):
     name = "copml"
     engines = ("eager", "jit", "sharded")
     supports_subset = True           # decode from any R of N clients
+    supports_faults = True           # per-step FaultPlan schedules
 
     def __init__(self):
         self._drivers: dict = {}
@@ -222,11 +281,26 @@ class CopmlProtocol(Protocol):
             self._drivers[wl] = Copml(wl.cfg, wl.m, wl.d)
         return self._drivers[wl]
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def fault_threshold(self, wl) -> int:
+        """R = (2r+1)(K+T-1)+1 honest on-time clients per step."""
+        return elastic.straggler_budget(wl.n_clients, wl.cfg.k, wl.cfg.t,
+                                        wl.cfg.r).recovery_threshold
+
+    def _validate_plan(self, wl, plan):
+        """The paper's recovery threshold as a hard budget (elastic.py)."""
+        plan.validate(self.fault_threshold(wl), "COPML decode")
+
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         proto = self.driver(wl)
         cx, cy = wl.client_data()
+        step_subsets = adversaries = None
+        if plan is not None:
+            step_subsets = plan.subsets(wl.cfg.recovery_threshold)
+            adversaries = plan.adversary if plan.has_adversaries else None
         state, w, hist = run_copml_engine(proto, spec, key, cx, cy, iters,
-                                          subset=subset, history=history)
+                                          subset=subset, history=history,
+                                          step_subsets=step_subsets,
+                                          adversaries=adversaries)
         return w, hist, state
 
     def cost(self, wl, iters):
@@ -247,7 +321,7 @@ class MpcBaselineProtocol(Protocol):
                 wl.cfg, wl.m, wl.d, groups=self.groups, scheme=self.scheme)
         return self._drivers[wl]
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         mb = self.driver(wl)
         x, y, _, _ = wl.data()
         if spec.kind == "jit":
@@ -267,7 +341,7 @@ class MpcBaselineProtocol(Protocol):
 class FloatProtocol(Protocol):
     name = "float"
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         x, y, _, _ = wl.data()
         eta = wl.cfg.eta
         if spec.kind == "jit":
@@ -282,7 +356,7 @@ class FloatProtocol(Protocol):
 class PolyFloatProtocol(Protocol):
     name = "poly_float"
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         x, y, _, _ = wl.data()
         eta, r, bound = wl.cfg.eta, wl.cfg.r, wl.cfg.sigmoid_bound
         if spec.kind == "jit":
@@ -298,23 +372,46 @@ class PolyFloatProtocol(Protocol):
 class SecureAggProtocol(Protocol):
     name = "secure_agg"
     supports_subset = True           # reconstruct from any T+1 holders
+    supports_faults = True           # per-step T+1-of-N share selection
 
     def agg_config(self, wl) -> secure_agg.SecureAggConfig:
         """Privacy threshold T from the workload's COPML parameterization;
         lq/clip at the module defaults (validated against the field)."""
         return secure_agg.SecureAggConfig(n_clients=wl.n_clients, t=wl.cfg.t)
 
-    def _run(self, wl, spec, key, iters, subset, history):
+    def _validate_plan(self, wl, plan):
+        """Shamir aggregation reconstructs from any T+1 holders' shares
+        (elastic.secure_agg_budget); the plan governs which holders'
+        shares each round's reconstruction reads.  There is no redundancy
+        on the OWNER side (every gradient is summed exactly once), so
+        corrupted contributions cannot be excluded -- adversarial plans
+        are rejected for this protocol."""
+        if plan.has_adversaries:
+            raise elastic.FaultPlanViolation(
+                "secure_agg tolerates straggling/dropped share holders, "
+                "not adversarially corrupted contributions (no decode "
+                "redundancy over gradient owners); use the copml protocol "
+                "for adversary schedules")
+        plan.validate(self.fault_threshold(wl), "secure_agg share")
+
+    def fault_threshold(self, wl) -> int:
+        """T+1 share holders per step (Shamir reconstruction)."""
+        return elastic.secure_agg_budget(wl.n_clients,
+                                         wl.cfg.t).recovery_threshold
+
+    def _run(self, wl, spec, key, iters, subset, history, plan=None):
         cx, cy = wl.client_data()
         cfg, eta = self.agg_config(wl), wl.cfg.eta
+        step_subsets = None if plan is None else plan.subsets(cfg.t + 1)
         if spec.kind == "jit":
             w, hist = secure_agg.secure_logreg_scan(
                 key, cx, cy, cfg, eta, iters, subset=subset,
-                history=history)
+                history=history, step_subsets=step_subsets)
             return w, hist, cfg
         rows, cb = _history_recorder(history)
         w = secure_agg.secure_logreg(key, cx, cy, cfg, eta, iters,
-                                     subset=subset, callback=cb)
+                                     subset=subset, callback=cb,
+                                     step_subsets=step_subsets)
         return w, _stack_history(rows, wl.d), cfg
 
 

@@ -41,6 +41,9 @@ class TrainResult:
                    the paper does not price (float, poly_float, secure_agg)
     state          protocol-native final state (e.g. CopmlState with the
                    final secret shares), for tests and further inspection
+    availability   per-step availability record of the run's FaultPlan,
+                   bool (iters, N) (True = client contributed honestly and
+                   on time that step), or None for a fault-free run
     """
     workload: str
     protocol: str
@@ -53,6 +56,7 @@ class TrainResult:
     final_accuracy: float | None = None
     cost: dict | None = None
     state: object = None
+    availability: np.ndarray | None = None
 
     @property
     def triple(self) -> tuple:
@@ -67,4 +71,8 @@ class TrainResult:
         if self.cost is not None:
             parts.append(f"modeled total {self.cost['total_s']:.0f}s "
                          f"(comm {self.cost['comm_s']:.0f}s)")
+        if self.availability is not None:
+            n = self.availability.shape[1]
+            parts.append(f"churn: min {int(self.availability.sum(1).min())}"
+                         f"/{n} clients available")
         return "  ".join(parts)

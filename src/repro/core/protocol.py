@@ -78,6 +78,14 @@ class CopmlConfig:
             "fixed-point budget exceeds field size")
 
 
+# Corruption offset added to an adversarial client's coded gradient.  It
+# must be LARGE: the decode-weighted offset passes through TruncPr's 2^{k1}
+# rescale, so a small perturbation (say +1, weighted shift ~q_eta) truncates
+# away invisibly and corruption would be untestable; 2^20 leaves a clearly
+# visible model change whenever a corrupted contribution enters a decode.
+ADV_OFFSET = 1 << 20
+
+
 def case1_params(n: int, r: int = 1) -> tuple:
     """Paper Case 1 (max parallelization): K = floor((N-1)/(2r+1)), T = 1."""
     return max(1, (n - 1) // (2 * r + 1)), 1
@@ -234,14 +242,27 @@ class Copml:
             coded_x, coded_w, self.poly_coeffs)                  # (N, d)
 
     def decode_and_update(self, key, state: CopmlState, f_values,
-                          subset: Sequence[int] | None = None):
-        """Phase 4: share f, decode on shares, secure model update."""
+                          subset: Sequence[int] | None = None, *,
+                          subset_idx=None, dvec=None):
+        """Phase 4: share f, decode on shares, secure model update.
+
+        The decode subset comes in one of two forms: a static `subset`
+        tuple (host constant, the pre-fault-plan path), or traced
+        `subset_idx` (R,) gather indices with the matching `dvec` (R,)
+        decode row -- the per-step form the fault-injection engines thread
+        through their scans (one compiled program decodes from a different
+        client subset every iteration)."""
         cfg, n = self.cfg, self.cfg.n_clients
         kf, kt = jax.random.split(key)
         rthr = cfg.recovery_threshold
-        if subset is None:
-            subset = tuple(range(rthr))
-        subset = tuple(subset)[:rthr]
+        if subset_idx is None:
+            if subset is None:
+                subset = tuple(range(rthr))
+            subset = tuple(subset)[:rthr]
+            subset_idx = jnp.asarray(subset)
+            dvec = jnp.asarray(self._decode_vec(subset))         # (R,)
+        else:
+            assert dvec is not None, "subset_idx needs its decode row dvec"
 
         # EXCHANGE: each client shares its local result
         f_shares = shamir.share_batch(kf, f_values, cfg.t, n,
@@ -257,8 +278,7 @@ class Copml:
         # (N_holder, N_owner, d); each holder decodes from its R rows.
         # sum over K commutes with the decode matmul: fold it into ONE
         # matvec row  (sum_k D[k, :]) @ evals  -- K x less local work
-        dvec = jnp.asarray(self._decode_vec(subset))             # (R,)
-        evals = per_holder[:, jnp.asarray(subset), :]            # (N_h, R, d)
+        evals = per_holder[:, subset_idx, :]                     # (N_h, R, d)
         xtg_shares = jax.vmap(
             lambda e: field.matmul(dvec[None], e)[0])(evals)     # (N, d)
 
@@ -280,11 +300,21 @@ class Copml:
         return (dmat.sum(axis=0) % field.P).astype(np.int32)
 
     def iteration(self, key, state: CopmlState,
-                  subset: Sequence[int] | None = None) -> CopmlState:
+                  subset: Sequence[int] | None = None, *,
+                  subset_idx=None, dvec=None, adv=None) -> CopmlState:
         k1_, k2_ = jax.random.split(key)
         coded_w = self.encode_model(k1_, state.w_shares)
         f_values = self.local_gradient(state.coded_x, coded_w)
-        return self.decode_and_update(k2_, state, f_values, subset)
+        if adv is not None:
+            # adversarial clients contribute a CORRUPTED coded gradient --
+            # any decode including one is visibly wrong (ADV_OFFSET); the
+            # fault plan keeps them out of subset_idx, and the
+            # bit-exactness tests prove the exclusion is real
+            f_values = jnp.where(adv[:, None],
+                                 field.add(f_values, jnp.asarray(
+                                     ADV_OFFSET, f_values.dtype)), f_values)
+        return self.decode_and_update(k2_, state, f_values, subset,
+                                      subset_idx=subset_idx, dvec=dvec)
 
     def _jitted_step(self, subset):
         """Per-instance cache: a fresh jax.jit(partial(...)) every call
@@ -294,11 +324,55 @@ class Copml:
             cache[subset] = jax.jit(partial(self.iteration, subset=subset))
         return cache[subset]
 
+    def _jitted_fault_step(self, with_adv: bool):
+        """One jitted step with the decode subset as TRACED arrays: the
+        eager fault engine swaps the subset every iteration without a
+        recompile per distinct subset (a long churn schedule would
+        otherwise mean a compile per step)."""
+        cache = self.__dict__.setdefault("_fault_step_cache", {})
+        if with_adv not in cache:
+            if with_adv:
+                fn = lambda key, st, idx, dv, adv: self.iteration(  # noqa: E731
+                    key, st, subset_idx=idx, dvec=dv, adv=adv)
+            else:
+                fn = lambda key, st, idx, dv: self.iteration(  # noqa: E731
+                    key, st, subset_idx=idx, dvec=dv)
+            cache[with_adv] = jax.jit(fn)
+        return cache[with_adv]
+
+    # ------------------------------------------------------ fault schedules
+
+    def plan_constants(self, step_subsets) -> tuple:
+        """Host-side compilation of a fault plan's per-step decode subsets
+        into the (iters, R) gather-index and decode-row arrays the engines
+        consume (exact-integer Lagrange rows, one per distinct subset)."""
+        return shamir.step_subset_arrays(
+            step_subsets, self.cfg.recovery_threshold, self._decode_vec)
+
+    def _fault_xs(self, step_subsets, adversaries, iters: int, subset=None):
+        """(idx, dvec, adv-or-None) scan inputs for a faulty run, or None."""
+        if step_subsets is None:
+            assert adversaries is None, "adversaries need step_subsets"
+            return None
+        if subset is not None:
+            raise ValueError("subset and step_subsets are mutually "
+                             "exclusive: the plan chooses each step's "
+                             "decode subset")
+        assert len(step_subsets) == iters, (len(step_subsets), iters)
+        idx, dvs = self.plan_constants(step_subsets)
+        adv = None
+        if adversaries is not None and np.asarray(adversaries).any():
+            adv = np.asarray(adversaries, bool)
+            assert adv.shape == (iters, self.cfg.n_clients), adv.shape
+            adv = jnp.asarray(adv)
+        return idx, dvs, adv
+
     # ------------------------------------------------------------------ train
 
     def _train_jit(self, key, client_xs, client_ys, iters: int,
                    subset: Sequence[int] | None = None,
-                   history: bool = False) -> tuple:
+                   history: bool = False, step_subsets=None,
+                   adversaries=None) -> tuple:
         """Run setup + `iters` GD iterations as ONE compiled lax.scan.
 
         The whole training loop is a single XLA program (one compile, one
@@ -309,29 +383,47 @@ class Copml:
         wrapper in `train` and by convergence diagnostics); opening inside
         the scan is trace-time work, not an extra communication round.
 
+        step_subsets/adversaries (a fault plan's per-step decode subsets and
+        (iters, N) corruption mask) ride through the scan as stacked array
+        inputs, so even a fully churned run stays ONE compiled dispatch.
+
         Returns (state, w) or (state, w, history (iters, d)).
         """
         ks, ki = jax.random.split(key)
         state = self.setup(ks, client_xs, client_ys)
         subset = None if subset is None else tuple(subset)
+        faults = self._fault_xs(step_subsets, adversaries, int(iters),
+                                subset)
         state, hist = _scan_iterations(self, ki, state, int(iters), subset,
-                                       bool(history))
+                                       bool(history), faults)
         w = self.open_model(state)
         return (state, w, hist) if history else (state, w)
 
     def _train_eager(self, key, client_xs, client_ys, iters: int,
                      subset: Sequence[int] | None = None,
-                     callback=None) -> tuple:
+                     callback=None, step_subsets=None,
+                     adversaries=None) -> tuple:
         """Reference trainer: Python loop, one jitted iteration per step.
 
         Kept as the ground truth the scan engine is verified against
-        (tests/test_protocol.py) and for step-through debugging.
+        (tests/test_protocol.py) and for step-through debugging.  A fault
+        plan's per-step subsets are swapped in every iteration (dynamic
+        gather indices -- one compile covers the whole schedule).
         """
         ks, ki = jax.random.split(key)
         state = self.setup(ks, client_xs, client_ys)
-        step = self._jitted_step(None if subset is None else tuple(subset))
+        faults = self._fault_xs(step_subsets, adversaries, iters, subset)
+        if faults is None:
+            step = self._jitted_step(
+                None if subset is None else tuple(subset))
+            args = lambda t: ()                                  # noqa: E731
+        else:
+            idx, dvs, adv = faults
+            step = self._jitted_fault_step(adv is not None)
+            args = lambda t: ((idx[t], dvs[t], adv[t])           # noqa: E731
+                              if adv is not None else (idx[t], dvs[t]))
         for t in range(iters):
-            state = step(jax.random.fold_in(ki, t), state)
+            state = step(jax.random.fold_in(ki, t), state, *args(t))
             if callback is not None:
                 callback(t, self.open_model(state))
         return state, self.open_model(state)
@@ -409,7 +501,8 @@ class Copml:
 
     def _train_sharded(self, key, client_xs, client_ys, iters: int,
                        mesh=None, subset: Sequence[int] | None = None,
-                       history: bool = False) -> tuple:
+                       history: bool = False, step_subsets=None,
+                       adversaries=None) -> tuple:
         """_train_jit with the client axis PHYSICALLY sharded over a mesh.
 
         Every share/coded array is split over a 1-D ("clients",) mesh
@@ -446,10 +539,24 @@ class Copml:
         ks, ki = jax.random.split(key)
         state = self.setup(ks, client_xs, client_ys)    # one-time, replicated
         subset = None if subset is None else tuple(subset)
-        fn, n_pad = self._sharded_scan(mesh, int(iters), subset, bool(history))
+        faults = self._fault_xs(step_subsets, adversaries, int(iters),
+                                subset)
+        fault_kind = None if faults is None else (
+            "plan_adv" if faults[2] is not None else "plan")
+        fn, n_pad = self._sharded_scan(mesh, int(iters), subset,
+                                       bool(history), fault_kind)
+        fault_args = ()
+        if faults is not None:
+            idx, dvs, adv = faults
+            fault_args = (idx, dvs)
+            if adv is not None:
+                # replicated (iters, n_pad) mask; padded clients honest
+                adv_pad = np.zeros((int(iters), n_pad), bool)
+                adv_pad[:, :n] = np.asarray(adv)
+                fault_args += (jnp.asarray(adv_pad),)
         out = fn(_pad_clients(state.w_shares, n_pad),
                  _pad_clients(state.coded_x, n_pad),
-                 _pad_clients(state.xty_shares, n_pad), ki)
+                 _pad_clients(state.xty_shares, n_pad), ki, *fault_args)
         w_pad, hist = out if history else (out, None)
         state = dataclasses.replace(
             state, w_shares=w_pad[:n],
@@ -465,10 +572,15 @@ class Copml:
         subset = None if subset is None else tuple(subset)
         return self._sharded_scan(mesh, 1, subset, False)
 
-    def _sharded_scan(self, mesh, iters: int, subset, history: bool):
-        """Build (and cache per instance) the jitted shard_map scan."""
+    def _sharded_scan(self, mesh, iters: int, subset, history: bool,
+                      fault_kind: str | None = None):
+        """Build (and cache per instance) the jitted shard_map scan.
+
+        fault_kind: None (static subset), "plan" (per-step (iters, R)
+        decode idx/row arrays scanned over, replicated), or "plan_adv"
+        (additionally an (iters, n_pad) corruption mask)."""
         cache = self.__dict__.setdefault("_sharded_cache", {})
-        ckey = (mesh, iters, subset, history)
+        ckey = (mesh, iters, subset, history, fault_kind)
         if ckey in cache:
             return cache[ckey]
 
@@ -534,8 +646,12 @@ class Copml:
                 open_=open_)
 
         def decode_update(k2_, w_loc, xty_loc, f_loc, pmat_loc, pmat_all,
-                          shard_ix):
-            """Phase 4, owner->holder exchange as a real all_to_all."""
+                          shard_ix, sub_t, dv_t):
+            """Phase 4, owner->holder exchange as a real all_to_all.
+
+            sub_t / dv_t: this step's decode gather indices and decode row
+            (the closure constants on the static path, per-step scan slices
+            on the fault-plan path)."""
             kf, kt = jax.random.split(k2_)
             # EXCHANGE: share_batch.  The sharing-polynomial draw spans ALL
             # owners (replicated dealer randomness, matching the global
@@ -553,9 +669,9 @@ class Copml:
                              f_loc[None])          # (N_holder, n_loc_own, d)
             per_holder = meshutil.all_to_all_clients(mine, axis)
             # (n_loc_holder, N_owner, d): decode LOCALLY per holder
-            evals = per_holder[:, sub_arr, :]                    # (n_loc,R,d)
+            evals = per_holder[:, sub_t, :]                      # (n_loc,R,d)
             xtg = jax.vmap(
-                lambda e: field.matmul(dvec[None], e)[0])(evals)
+                lambda e: field.matmul(dv_t[None], e)[0])(evals)
             grad = field.sub(xtg, xty_loc)
             scaled = field.mul_scalar(grad, self.q_eta)
             delta = trunc(kt, scaled, pmat_loc)
@@ -566,32 +682,45 @@ class Copml:
             wf = shamir.reconstruct(w_full, t_, self.lambdas)
             return quantize.dequantize(wf, cfg.lw)
 
-        def loop(w, coded_x, xty, pmat_loc, wall_loc, key):
+        def loop(w, coded_x, xty, pmat_loc, wall_loc, key, *fxs):
             shard_ix = jax.lax.axis_index(axis)
             pmat_all = jnp.asarray(pmat)          # replicated full power mat
 
-            def body(w_c, tstep):
+            def body(w_c, xs):
+                tstep, fx = xs[0], xs[1:]
                 kit = jax.random.fold_in(key, tstep)
                 k1_, k2_ = jax.random.split(kit)
                 coded_w = encode_model(k1_, w_c, pmat_loc, wall_loc)
                 f_loc = self.local_gradient(coded_x, coded_w)    # LOCAL
+                if fault_kind == "plan_adv":
+                    sub_t, dv_t, adv_t = fx
+                    adv_loc = jax.lax.dynamic_slice_in_dim(
+                        adv_t, shard_ix * n_loc, n_loc)
+                    f_loc = jnp.where(adv_loc[:, None],
+                                      field.add(f_loc, jnp.asarray(
+                                          ADV_OFFSET, f_loc.dtype)), f_loc)
+                elif fault_kind == "plan":
+                    sub_t, dv_t = fx
+                else:
+                    sub_t, dv_t = sub_arr, dvec
                 w_n = decode_update(k2_, w_c, xty, f_loc, pmat_loc, pmat_all,
-                                    shard_ix)
+                                    shard_ix, sub_t, dv_t)
                 return w_n, (open_w(w_n) if history else None)
 
-            w_f, hist = jax.lax.scan(body, w, jnp.arange(iters))
+            w_f, hist = jax.lax.scan(body, w, (jnp.arange(iters),) + fxs)
             return (w_f, hist) if history else w_f
 
+        n_fx = {"plan": 2, "plan_adv": 3}.get(fault_kind, 0)
         cl = P(axis)
         out_specs = (cl, P()) if history else cl
         sm = shard_map(loop, mesh,
-                       in_specs=(cl, cl, cl, cl, cl, P()),
+                       in_specs=(cl, cl, cl, cl, cl, P()) + (P(),) * n_fx,
                        out_specs=out_specs, check_rep=False)
         jfn = jax.jit(sm)
         pmat_j, wall_j = jnp.asarray(pmat), jnp.asarray(wall)
 
-        def call(w, coded_x, xty, key):
-            return jfn(w, coded_x, xty, pmat_j, wall_j, key)
+        def call(w, coded_x, xty, key, *fault_args):
+            return jfn(w, coded_x, xty, pmat_j, wall_j, key, *fault_args)
 
         cache[ckey] = (call, n_pad)
         return cache[ckey]
@@ -608,16 +737,27 @@ def _pad_clients(arr, n_pad: int):
 
 @partial(jax.jit, static_argnames=("proto", "iters", "subset", "history"))
 def _scan_iterations(proto: Copml, key, state: CopmlState, iters: int,
-                     subset, history: bool):
+                     subset, history: bool, faults=None):
     """lax.scan over GD iterations; the whole loop is one XLA program.
 
     `proto` is static (hashed by identity): the scan recompiles per protocol
     instance but runs every iteration inside a single dispatch.  Per-step
     keys are fold_in(key, t) -- identical to the eager loop's schedule.
+
+    `faults` is None or (idx (iters, R), dvec (iters, R), adv (iters, N)
+    or None): a fault plan's per-step decode subsets (and corruption mask)
+    scanned over alongside the step counter -- churn costs zero extra
+    dispatches.
     """
 
-    def body(st, t):
-        st = proto.iteration(jax.random.fold_in(key, t), st, subset)
+    def body(st, xs):
+        t, fx = xs
+        if fx is None:
+            st = proto.iteration(jax.random.fold_in(key, t), st, subset)
+        else:
+            idx_t, dv_t, adv_t = fx
+            st = proto.iteration(jax.random.fold_in(key, t), st,
+                                 subset_idx=idx_t, dvec=dv_t, adv=adv_t)
         return st, (proto.open_model(st) if history else None)
 
-    return jax.lax.scan(body, state, jnp.arange(iters))
+    return jax.lax.scan(body, state, (jnp.arange(iters), faults))

@@ -93,12 +93,16 @@ def aggregate_shares(all_shares):
 
 
 def decode_mean(key, sum_shares, cfg: SecureAggConfig,
-                subset: Sequence[int] | None = None):
+                subset: Sequence[int] | None = None, sel=None):
     """Reconstruct sum from any T+1 shares, secure-truncate to the mean.
 
     sum_shares: (N_holder, L) shares of the sum.  Uses TruncPr with
     k1 = log2(N) so the opened value is mean = sum / N with stochastic
     rounding (unbiased, Thm-1-compatible noise).
+
+    sel: optional (idx (T+1,), weights (T+1,)) TRACED share selection (see
+    shamir.reconstruct_dyn) -- the per-step T+1-of-N holder choice of the
+    fault-injection engines; `subset` stays the static-host alternative.
     """
     n = cfg.n_clients
     k1 = max(1, int(round(math.log2(n))))
@@ -108,9 +112,22 @@ def decode_mean(key, sum_shares, cfg: SecureAggConfig,
     k2 = min(field.P_BITS - 1,
              int(math.ceil(math.log2(cfg.clip * (1 << cfg.lq) * n))) + 2)
     truncated = truncation.trunc_pr(key, sum_shares, k1, k2, cfg.t)
-    opened = shamir.reconstruct(truncated, cfg.t, subset=subset)
+    if sel is not None:
+        opened = shamir.reconstruct_dyn(truncated, sel[0], sel[1])
+    else:
+        opened = shamir.reconstruct(truncated, cfg.t, subset=subset)
     mean = quantize.dequantize(opened, cfg.lq) * (eff_n / n)
     return mean
+
+
+def selection_arrays(cfg: SecureAggConfig, step_subsets) -> tuple:
+    """Host-compile a fault plan's per-step holder subsets into the
+    (iters, T+1) gather-index and Lagrange-weight arrays decode_mean's
+    dynamic path consumes (weights computed once per distinct subset)."""
+    points = shamir.default_eval_points(cfg.n_clients)
+    return shamir.step_subset_arrays(
+        step_subsets, cfg.t + 1,
+        lambda sub: shamir.recon_weights(points, sub))
 
 
 def secure_aggregate(key, grads_per_client, cfg: SecureAggConfig,
@@ -163,7 +180,7 @@ def _client_mean_grads(xs, ys, mask, w):
     return g / jnp.sum(mask, axis=1, keepdims=True)
 
 
-def _secure_mean_step(key, g, cfg: SecureAggConfig, subset):
+def _secure_mean_step(key, g, cfg: SecureAggConfig, subset, sel=None):
     """One aggregation round on (N, d) gradients: the same key schedule and
     field ops as secure_aggregate over [{'g': g[j]}] pytrees."""
     keys = jax.random.split(key, cfg.n_clients + 1)
@@ -171,26 +188,36 @@ def _secure_mean_step(key, g, cfg: SecureAggConfig, subset):
         keys[: cfg.n_clients], g)                        # (owner, holder, d)
     per_holder = jnp.swapaxes(shares, 0, 1)
     sum_shares = jax.vmap(aggregate_shares)(per_holder)
-    return decode_mean(keys[cfg.n_clients], sum_shares, cfg, subset)
+    return decode_mean(keys[cfg.n_clients], sum_shares, cfg, subset, sel)
 
 
 def secure_logreg(key, client_xs, client_ys, cfg: SecureAggConfig,
                   eta: float, iters: int,
-                  subset: Sequence[int] | None = None, callback=None):
+                  subset: Sequence[int] | None = None, callback=None,
+                  step_subsets=None):
     """Eager engine: Python loop, one secure_aggregate round per GD step.
 
     Each step j's local gradient is the client's mean gradient, so the
     decoded mean-of-means equals the full-batch gradient (up to split
-    raggedness).  Returns the final float model (d,)."""
+    raggedness).  `step_subsets` (a fault plan's per-step T+1 holder
+    choices) overrides `subset` with a different reconstruction subset
+    every round.  Returns the final float model (d,)."""
     cfg.validate()
     xs, ys, mask = _padded_clients(client_xs, client_ys)
+    sel_arrays = None if step_subsets is None else \
+        selection_arrays(cfg, step_subsets)
     w = jnp.zeros((xs.shape[2],), jnp.float32)
     for t in range(iters):
         g = _client_mean_grads(xs, ys, mask, w)
-        grads = [{"g": g[j]} for j in range(cfg.n_clients)]
-        mean = secure_aggregate(jax.random.fold_in(key, t), grads, cfg,
-                                subset)
-        w = w - eta * mean["g"].astype(jnp.float32)
+        if sel_arrays is not None:
+            mean = _secure_mean_step(
+                jax.random.fold_in(key, t), g, cfg, None,
+                (sel_arrays[0][t], sel_arrays[1][t]))
+        else:
+            grads = [{"g": g[j]} for j in range(cfg.n_clients)]
+            mean = secure_aggregate(jax.random.fold_in(key, t), grads, cfg,
+                                    subset)["g"]
+        w = w - eta * mean.astype(jnp.float32)
         if callback is not None:
             callback(t, np.asarray(w))
     return np.asarray(w)
@@ -199,29 +226,36 @@ def secure_logreg(key, client_xs, client_ys, cfg: SecureAggConfig,
 def secure_logreg_scan(key, client_xs, client_ys, cfg: SecureAggConfig,
                        eta: float, iters: int,
                        subset: Sequence[int] | None = None,
-                       history: bool = True):
+                       history: bool = True, step_subsets=None):
     """jit engine: the whole loop as one compiled lax.scan.
 
     Same per-step fold_in key schedule and the same share/decode field ops
     as the eager loop (the aggregation rounds are bit-identical; only the
-    float gradient einsum may differ in summation order).  Returns
+    float gradient einsum may differ in summation order).  A fault plan's
+    `step_subsets` ride through the scan as stacked (iters, T+1)
+    index/weight arrays -- the churned run stays one dispatch.  Returns
     (w, history (iters, d) or None)."""
     cfg.validate()
     xs, ys, mask = _padded_clients(client_xs, client_ys)
     subset = None if subset is None else tuple(subset)
+    sel = None if step_subsets is None else \
+        selection_arrays(cfg, step_subsets)
     w, hist = _secure_logreg_jit(key, xs, ys, mask, cfg, float(eta),
-                                 int(iters), subset, bool(history))
+                                 int(iters), subset, bool(history), sel)
     return np.asarray(w), (None if hist is None else np.asarray(hist))
 
 
 @partial(jax.jit, static_argnames=("cfg", "eta", "iters", "subset",
                                    "history"))
-def _secure_logreg_jit(key, xs, ys, mask, cfg, eta, iters, subset, history):
-    def body(w, t):
+def _secure_logreg_jit(key, xs, ys, mask, cfg, eta, iters, subset, history,
+                       sel=None):
+    def body(w, xs_t):
+        t, sel_t = xs_t
         g = _client_mean_grads(xs, ys, mask, w)
-        mean = _secure_mean_step(jax.random.fold_in(key, t), g, cfg, subset)
+        mean = _secure_mean_step(jax.random.fold_in(key, t), g, cfg, subset,
+                                 sel_t)
         w = w - eta * mean.astype(jnp.float32)
         return w, (w if history else None)
 
     return jax.lax.scan(body, jnp.zeros((xs.shape[2],), jnp.float32),
-                        jnp.arange(iters))
+                        (jnp.arange(iters), sel))

@@ -94,6 +94,52 @@ def reconstruct(shares, t: int, points: Sequence[int] | None = None,
     return out.reshape(shares.shape[1:])
 
 
+def step_subset_arrays(step_subsets, r: int, weight_fn) -> tuple:
+    """Host-compile per-step subsets into the (iters, r) gather-index and
+    weight arrays the dynamic decode paths consume.
+
+    weight_fn(subset_tuple) -> (r,) int32 public decode/reconstruction row;
+    called once per DISTINCT subset (host work is O(#distinct), not
+    O(iters)).  Shared by Copml.plan_constants (LCC decode rows) and
+    secure_agg.selection_arrays (Shamir reconstruction weights)."""
+    cache: dict = {}
+    idx = np.zeros((len(step_subsets), r), np.int32)
+    wts = np.zeros((len(step_subsets), r), np.int32)
+    for s, sub in enumerate(step_subsets):
+        sub = tuple(int(i) for i in sub)
+        assert len(sub) >= r, (
+            f"step {s} subset has {len(sub)} < {r} clients")
+        sub = sub[:r]
+        if sub not in cache:
+            cache[sub] = weight_fn(sub)
+        idx[s] = sub
+        wts[s] = cache[sub]
+    return jnp.asarray(idx), jnp.asarray(wts)
+
+
+def recon_weights(points: Sequence[int], subset: Sequence[int]) -> np.ndarray:
+    """Host-side (r,) Lagrange weights at z=0 for `subset` of the share
+    points -- the public constant `reconstruct_dyn` pairs with its traced
+    gather indices.  Computed exactly with Python ints (lru-cached)."""
+    lams = tuple(int(points[i]) for i in subset)
+    return _recon_matrix(lams)[0]
+
+
+def reconstruct_dyn(shares, idx, weights):
+    """Reconstruct with TRACED subset indices and precomputed weights.
+
+    idx: (r,) int32 gather indices into the client axis; weights: (r,) the
+    matching `recon_weights` row.  Identical field math to `reconstruct`
+    with a static subset, but the subset can change per scan step inside a
+    single compiled program -- the per-step share selection of the
+    fault-injection engines (any r = T+1 holders suffice).
+    """
+    r = idx.shape[0]
+    sub = shares[idx]                                       # (r, ...)
+    out = field.matmul(jnp.asarray(weights).reshape(1, r), sub.reshape(r, -1))
+    return out.reshape(shares.shape[1:])
+
+
 def share_batch(key, secrets, t: int, n: int,
                 points: Sequence[int] | None = None):
     """Share J independent secrets (leading axis = owners) in ONE matmul:

@@ -156,18 +156,29 @@ def run_parity(args) -> None:
     """Train sharded on the client mesh, re-train single-device, compare.
 
     Both runs go through api.fit -- the same facade path every other
-    driver uses; only the engine axis differs."""
+    driver uses; only the engine axis differs.  With --straggle-p the SAME
+    seeded FaultPlan is replayed by both engines (mid-training churn over
+    real collectives, still bit-exact)."""
     from .. import api
     wl = _workload(args)
     cfg = wl.cfg
     mesh = meshutil.client_mesh(args.devices)
+    plan = None
+    if args.straggle_p is not None:
+        # the SAME threshold api.fit's plan validation enforces
+        thr = api.PROTOCOLS["copml"].fault_threshold(wl)
+        plan = api.FaultPlan.random(
+            cfg.n_clients, args.iters, seed=args.fault_seed,
+            straggle_p=args.straggle_p, min_available=thr)
+        print(plan.describe(thr))
     print(f"COPML distributed: N={cfg.n_clients} clients over "
           f"{mesh.size} devices, K={cfg.k} T={cfg.t} "
           f"R={cfg.recovery_threshold}, {args.iters} iterations")
     res_s = api.fit(wl, "copml", api.EngineSpec("sharded", mesh=mesh),
-                    key=args.seed, iters=args.iters, history=False)
+                    key=args.seed, iters=args.iters, history=False,
+                    faults=plan)
     res_j = api.fit(wl, "copml", "jit", key=args.seed, iters=args.iters,
-                    history=False)
+                    history=False, faults=plan)
     np.testing.assert_array_equal(res_s.weights, res_j.weights)
     np.testing.assert_array_equal(np.asarray(res_s.state.w_shares),
                                   np.asarray(res_j.state.w_shares))
@@ -213,6 +224,10 @@ def main(argv=None) -> None:
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggle-p", type=float, default=None,
+                    help="replay a seeded FaultPlan (mid-training churn) "
+                         "on both engines of the parity demo")
+    ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--bench", action="store_true",
                     help="print benchmark CSV rows instead of the parity demo")
     args = ap.parse_args(argv)

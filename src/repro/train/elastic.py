@@ -18,15 +18,25 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from ..core import lagrange, meshutil
+
+
+def replan_shape(n_devices: int, prefer_model: int = 16) -> tuple:
+    """Pure factorization behind replan_mesh: largest (data, model) with
+    model | prefer_model that divides n_devices.  Testable without devices
+    (non-power-of-two counts fall through to the largest fitting divisor;
+    odd counts end at model=1)."""
+    model = prefer_model
+    while model > 1 and (n_devices % model or model > n_devices):
+        model //= 2
+    return n_devices // model, model
 
 
 def replan_mesh(n_devices: int, prefer_model: int = 16):
     """Largest (data, model) mesh with model | prefer_model that fits."""
-    model = prefer_model
-    while model > 1 and (n_devices % model or model > n_devices):
-        model //= 2
-    data = n_devices // model
+    data, model = replan_shape(n_devices, prefer_model)
     return meshutil.make_mesh((data, model), ("data", "model"))
 
 
@@ -47,3 +57,42 @@ def straggler_budget(n: int, k: int, t: int, r: int = 1) -> StragglerBudget:
 def secure_agg_budget(n: int, t: int) -> StragglerBudget:
     """Shamir aggregation: any T+1 of N shares reconstruct."""
     return StragglerBudget(n, t + 1)
+
+
+# ------------------------------------------------- fault-plan budget checks
+#
+# The budgets above become *enforced* here: api.fit(..., faults=plan) routes
+# a FaultPlan's per-step availability counts through validate_budget BEFORE
+# any engine compiles or runs, so an under-provisioned churn schedule is a
+# named error, not a silently-wrong decode.
+
+
+class FaultPlanViolation(ValueError):
+    """A fault schedule drops below the protocol's recovery threshold.
+
+    Raised by plan validation before any compute happens; the message names
+    the first violating step, its availability, and the threshold."""
+
+
+def plan_headroom(available_counts, threshold: int) -> np.ndarray:
+    """Per-step headroom: available contributors minus the recovery
+    threshold.  Negative entries are the steps a decode would fail."""
+    return np.asarray(available_counts, np.int64) - int(threshold)
+
+
+def validate_budget(available_counts, threshold: int,
+                    what: str = "decode") -> np.ndarray:
+    """Reject schedules that ever drop below `threshold` contributors.
+
+    available_counts: per-step number of honest, on-time clients.
+    Returns the per-step headroom array on success; raises
+    FaultPlanViolation naming the first violating step otherwise."""
+    head = plan_headroom(available_counts, threshold)
+    bad = np.flatnonzero(head < 0)
+    if bad.size:
+        s = int(bad[0])
+        raise FaultPlanViolation(
+            f"fault plan leaves {int(head[s]) + threshold} available "
+            f"clients at step {s}, below the {what} recovery threshold "
+            f"{threshold} ({bad.size} violating step(s) total)")
+    return head

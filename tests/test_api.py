@@ -289,8 +289,8 @@ def test_benchmark_stage_registry():
         sys.path.insert(0, _REPO)
     brun = importlib.import_module("benchmarks.run")
     stages = brun.build_stages()
-    assert set(stages) >= {"kernel", "engine", "distributed", "fig3",
-                           "fig4", "table1", "table2", "roofline"}
+    assert set(stages) >= {"kernel", "engine", "distributed", "resilience",
+                           "fig3", "fig4", "table1", "table2", "roofline"}
     for s in stages.values():
         assert len(s.triple) == 3, s
         assert s.doc

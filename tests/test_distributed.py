@@ -67,6 +67,24 @@ parity("case2_n16_dev8", 16, k2, t2, 8)
 # straggler subset: decode from the LAST R of N clients
 parity("subset_n13_dev4", 13, 3, 1, 4, subset=tuple(range(3, 13)))
 
+# FaultPlan replayed over REAL collectives: per-step churn threaded through
+# the shard_map scan, bit-exact vs the single-device jit engine
+from repro import api
+plan = api.FaultPlan.random(13, 3, seed=2, straggle_p=0.3, min_available=10)
+assert not plan.is_fault_free
+wl = api.Workload(name="dist_faults", m=78, d=6, seed=3,
+                  cfg=CopmlConfig(n_clients=13, k=3, t=1, eta=1.0), iters=3)
+res_s = api.fit(wl, "copml",
+                api.EngineSpec("sharded", mesh=meshutil.client_mesh(4)),
+                key=5, iters=3, faults=plan, history=True)
+res_j = api.fit(wl, "copml", "jit", key=5, iters=3, faults=plan,
+                history=True)
+np.testing.assert_array_equal(res_s.weights, res_j.weights)
+np.testing.assert_array_equal(np.asarray(res_s.history),
+                              np.asarray(res_j.history))
+np.testing.assert_array_equal(res_s.availability, plan.available)
+print("PARITY faultplan_n13_dev4", flush=True)
+
 # dryrun_cell smoke: compile one real sharded iteration, check collectives
 from repro.launch import copml_dist
 rec = copml_dist.dryrun_cell("smoke", meshutil.client_mesh(4), False)
@@ -94,7 +112,7 @@ def test_train_sharded_bit_exact_subprocess():
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
     for marker in ("PARITY case1_n13_dev4_history", "PARITY case1_n13_dev8",
                    "PARITY case2_n16_dev8", "PARITY subset_n13_dev4",
-                   "DRYRUN OK", "ALL OK"):
+                   "PARITY faultplan_n13_dev4", "DRYRUN OK", "ALL OK"):
         assert marker in out.stdout, (marker, out.stdout[-2000:])
 
 

@@ -1,0 +1,161 @@
+"""train/elastic.py budgets + train/checkpoint.py re-mesh restore.
+
+The elastic module's budget math is the validation layer of the fault
+engine (tests/test_faults.py covers that wiring); here the primitives
+get direct coverage: budget arithmetic, mesh re-planning on awkward
+(non-power-of-two) device counts, and checkpoint save -> restore parity
+when the restore lands on a re-planned mesh.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.train import checkpoint, elastic
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------------ budgets
+
+
+def test_straggler_budget_matches_paper_threshold():
+    # N=50, Case 2 (K=10, T=7): R = 3*(10+7-1)+1 = 49 -> 1 client of slack
+    b = elastic.straggler_budget(50, 10, 7)
+    assert (b.recovery_threshold, b.tolerable) == (49, 1)
+    # r scales the polynomial degree: r=2 -> (2r+1)=5
+    assert elastic.straggler_budget(40, 4, 2, r=2).recovery_threshold == 26
+    # smoke_straggler's shape
+    assert elastic.straggler_budget(13, 3, 1).tolerable == 3
+
+
+def test_secure_agg_budget():
+    b = elastic.secure_agg_budget(13, 2)
+    assert (b.n, b.recovery_threshold, b.tolerable) == (13, 3, 10)
+
+
+def test_plan_headroom_and_validate():
+    np.testing.assert_array_equal(
+        elastic.plan_headroom([12, 10, 13], 10), [2, 0, 3])
+    elastic.validate_budget([12, 10, 13], 10)          # no raise
+    with pytest.raises(elastic.FaultPlanViolation,
+                       match="step 1.*threshold 10"):
+        elastic.validate_budget([12, 9, 8], 10, "COPML decode")
+
+
+# ------------------------------------------------------------------ replan
+
+
+def test_replan_shape_non_power_of_two_counts():
+    """The factorization behind replan_mesh: model picks the largest
+    power-of-two divisor of the device count <= prefer_model."""
+    assert elastic.replan_shape(6) == (3, 2)
+    assert elastic.replan_shape(12) == (3, 4)
+    assert elastic.replan_shape(48) == (3, 16)
+    assert elastic.replan_shape(7) == (7, 1)       # odd: model collapses
+    assert elastic.replan_shape(1) == (1, 1)
+    assert elastic.replan_shape(8, prefer_model=4) == (2, 4)
+    for n in (1, 2, 3, 5, 6, 7, 12, 24, 40, 96):
+        data, model = elastic.replan_shape(n)
+        assert data * model == n and model & (model - 1) == 0
+
+
+def test_replan_mesh_single_device():
+    mesh = elastic.replan_mesh(1)
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+# --------------------------------------------------------------- checkpoint
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((8, 4)).astype(np.float32),
+        "opt": {"mu": rng.standard_normal((8, 4)).astype(np.float32)},
+        "step": 7,
+    }
+
+
+def test_checkpoint_roundtrip_and_newest_step(tmp_path):
+    ck = checkpoint.Checkpointer(str(tmp_path), keep=2)
+    t1, t2 = _tree(1), _tree(2)
+    ck.save(1, t1, blocking=True)
+    ck.save(2, t2, blocking=True)
+    assert ck.list_steps() == [1, 2]
+    restored, step = ck.restore(_tree(0))           # newest complete step
+    assert step == 2 and restored["step"] == 7
+    np.testing.assert_array_equal(restored["w"], t2["w"])
+    np.testing.assert_array_equal(restored["opt"]["mu"], t2["opt"]["mu"])
+    # keep=2 GC: a third save evicts step 1
+    ck.save(3, _tree(3), blocking=True)
+    assert ck.list_steps() == [2, 3]
+
+
+def test_checkpoint_restore_onto_replanned_mesh(tmp_path):
+    """save -> restore with shardings from a re-planned mesh: the elastic
+    restart path (device_put against the NEW mesh's shardings).  On this
+    host the re-planned mesh is (1, 1); the multi-device re-mesh runs in
+    the subprocess test below."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = checkpoint.Checkpointer(str(tmp_path))
+    tree = _tree(4)
+    ck.save(5, tree, blocking=True)
+    mesh = elastic.replan_mesh(len(jax.devices()))
+    sh = NamedSharding(mesh, P("data"))
+    shardings = {"w": sh, "opt": {"mu": sh}, "step": None}
+    restored, step = ck.restore(_tree(0), shardings=shardings)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(restored["opt"]["mu"]),
+                                  tree["opt"]["mu"])
+    assert restored["step"] == 7                  # scalar leaf cast
+    assert restored["w"].sharding.is_equivalent_to(sh, restored["w"].ndim)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint, elastic
+
+assert len(jax.devices()) == 6
+mesh = elastic.replan_mesh(6)                 # non-power-of-two: (3, 2)
+assert dict(mesh.shape) == {"data": 3, "model": 2}, mesh.shape
+
+# save sharded over (3, 2); restore re-planned onto a 1x2 slice "failure"
+ck = checkpoint.Checkpointer("ckpt_remesh")
+w = np.arange(24, dtype=np.float32).reshape(6, 4)
+placed = jax.device_put(w, NamedSharding(mesh, P("data", "model")))
+ck.save(1, {"w": placed}, blocking=True)
+
+mesh2 = elastic.replan_mesh(6, prefer_model=1)    # (6, 1): all-data remesh
+assert dict(mesh2.shape) == {"data": 6, "model": 1}
+sh2 = NamedSharding(mesh2, P("data"))
+restored, step = ck.restore({"w": w}, shardings={"w": sh2})
+np.testing.assert_array_equal(np.asarray(restored["w"]), w)
+assert restored["w"].sharding.is_equivalent_to(sh2, 2)
+print("REMESH OK", flush=True)
+"""
+
+
+def test_replan_mesh_and_checkpoint_remesh_subprocess(tmp_path):
+    """Non-power-of-two device count (6 virtual devices) end to end:
+    replan_mesh factorization + checkpoint restore across two different
+    re-planned meshes.  Needs XLA_FLAGS before jax imports, hence the
+    subprocess; it only builds meshes and moves one tiny array."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(_REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True, env=env,
+                         cwd=str(tmp_path), timeout=300)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "REMESH OK" in out.stdout

@@ -1,0 +1,140 @@
+"""Property-based conformance for the resilience substrate.
+
+Runs under real `hypothesis` where available, else the deterministic shim
+(tests/_hypothesis_compat.py -- boundary values + seeded draws).  The two
+properties the fault-injection engine is built on, stated over RANDOM
+parameters rather than the unit tests' fixed ones:
+
+* Shamir: a secret reconstructs from ANY subset of exactly T+1 of its N
+  shares (the secure-aggregation budget), including via the traced-index
+  reconstruct_dyn path the per-step engines use;
+* LCC: decoding f-evaluations from ANY subset of exactly R = D(K+T-1)+1
+  of the N coded results yields the identical field element (the COPML
+  budget) -- which is precisely why a FaultPlan swap is bit-exact free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F, lagrange, shamir
+
+MAX_SEED = 2 ** 31 - 1
+
+
+def _rng_subset(rng, n: int, size: int) -> tuple:
+    """A uniformly random size-`size` client subset (unsorted: order must
+    not matter either)."""
+    return tuple(int(i) for i in rng.permutation(n)[:size])
+
+
+# --------------------------------------------------------------- shamir
+
+
+@given(st.integers(0, MAX_SEED), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_share_reconstructs_from_any_threshold_subset(seed, t):
+    """share -> reconstruct round-trip over a random subset of EXACTLY
+    T+1 shares, for random secrets, N, and subset choice."""
+    rng = np.random.default_rng(seed)
+    n = t + 1 + int(rng.integers(1, 6))
+    secret = jnp.asarray(rng.integers(0, F.P, size=(3, 4)).astype(np.int32))
+    shares = shamir.share(jax.random.PRNGKey(seed), secret, t, n)
+    sub = _rng_subset(rng, n, t + 1)
+    rec = shamir.reconstruct(shares, t, subset=sub)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(secret))
+    # the traced-index path (what the per-step fault engines run) agrees
+    points = shamir.default_eval_points(n)
+    rec_dyn = shamir.reconstruct_dyn(
+        shares, jnp.asarray(sub, jnp.int32),
+        shamir.recon_weights(points, sub))
+    np.testing.assert_array_equal(np.asarray(rec_dyn), np.asarray(secret))
+
+
+@given(st.integers(0, MAX_SEED))
+@settings(max_examples=8, deadline=None)
+def test_sum_shares_reconstruct_from_any_subset(seed):
+    """The secure_agg invariant: holder-side share sums reconstruct the
+    sum of secrets from any T+1 holders."""
+    rng = np.random.default_rng(seed)
+    t, n, j = 2, 7, 4
+    secrets = jnp.asarray(rng.integers(0, F.P, size=(j, 5)).astype(np.int32))
+    shares = shamir.share_batch(jax.random.PRNGKey(seed), secrets, t, n)
+    summed = shares[0]
+    for o in range(1, j):
+        summed = F.add(summed, shares[o])        # (N_holder, 5)
+    expect = np.asarray(secrets[0])
+    for o in range(1, j):
+        expect = np.asarray(F.add(jnp.asarray(expect), secrets[o]))
+    rec = shamir.reconstruct(summed, t, subset=_rng_subset(rng, n, t + 1))
+    np.testing.assert_array_equal(np.asarray(rec), expect)
+
+
+# -------------------------------------------------------------- lagrange
+
+
+def _coded_round(rng, k, t, r, n):
+    """One COPML-style round: coded data + coded model + per-client
+    f(X~_i, w~_i) evaluations of the degree-(2r+1) polynomial."""
+    mk, d = 4, 3
+    alphas, betas = lagrange.default_points(n, k, t)
+    blocks = jnp.asarray(rng.integers(0, F.P, size=(k, mk, d)
+                                      ).astype(np.int32))
+    masks = jnp.asarray(rng.integers(0, F.P, size=(t, mk, d)
+                                     ).astype(np.int32))
+    coded = lagrange.lcc_encode(blocks, masks, alphas, betas)
+    w = jnp.asarray(rng.integers(0, F.P, size=(d,)).astype(np.int32))
+    wb = jnp.broadcast_to(w[None, None, :], (k, 1, d))
+    vm = jnp.asarray(rng.integers(0, F.P, size=(t, 1, d)).astype(np.int32))
+    wc = lagrange.lcc_encode(wb, vm, alphas, betas)[:, 0, :]
+    coeffs = jnp.asarray(rng.integers(0, F.P, size=(r + 1,)
+                                      ).astype(np.int32))
+
+    def f(x, ww):
+        z = F.matmul(x, ww[:, None])[:, 0]
+        return F.matmul(x.T, F.evaluate_poly_dyn(coeffs, z)[:, None])[:, 0]
+
+    evals = jnp.stack([f(coded[i], wc[i]) for i in range(n)])
+    return evals, alphas, betas
+
+
+@given(st.integers(0, MAX_SEED), st.integers(1, 3), st.integers(1, 2))
+@settings(max_examples=6, deadline=None)
+def test_decode_invariant_across_valid_subsets(seed, k, t):
+    """Different random subsets of EXACTLY R evaluations from the same
+    round decode to the identical result -- the zero-cost-recovery
+    property the FaultPlan engines rely on step after step."""
+    r = 1
+    rthr = lagrange.recovery_threshold(r, k, t)
+    rng = np.random.default_rng(seed)
+    n = rthr + 2 + int(rng.integers(0, 3))
+    evals, alphas, betas = _coded_round(rng, k, t, r, n)
+    ref = None
+    for _ in range(3):
+        sub = sorted(_rng_subset(rng, n, rthr))
+        dec = np.asarray(lagrange.lcc_decode(
+            evals[jnp.asarray(sub)], [alphas[i] for i in sub], betas, k))
+        if ref is None:
+            ref = dec
+        else:
+            np.testing.assert_array_equal(dec, ref)
+
+
+@given(st.integers(0, MAX_SEED))
+@settings(max_examples=4, deadline=None)
+def test_threshold_is_tight(seed):
+    """R-1 random evaluations do NOT decode to the true value: the
+    validation threshold in elastic.validate_budget is not conservative."""
+    k, t, r = 2, 1, 1
+    rthr = lagrange.recovery_threshold(r, k, t)
+    rng = np.random.default_rng(seed)
+    n = rthr + 2
+    evals, alphas, betas = _coded_round(rng, k, t, r, n)
+    full = sorted(_rng_subset(rng, n, rthr))
+    good = np.asarray(lagrange.lcc_decode(
+        evals[jnp.asarray(full)], [alphas[i] for i in full], betas, k))
+    short = full[:-1]
+    bad = np.asarray(lagrange.lcc_decode(
+        evals[jnp.asarray(short)], [alphas[i] for i in short], betas, k))
+    assert not np.array_equal(bad, good)

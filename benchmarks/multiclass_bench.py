@@ -1,0 +1,89 @@
+"""Multiclass stage: encode-once C-class training vs C sequential binary fits.
+
+The class-batched objective's claim is an AMORTIZATION: one COPML run over
+a (d, C) matrix model quantizes, secret-shares, and LCC-encodes the dataset
+ONCE and pays only the C-wide model encode/decode per iteration, while C
+independent binary fits repeat the dominant dataset-sharing collectives C
+times.  This stage reports both sides of that claim:
+
+* modeled per-client communication (core/cost_model with the class-width
+  axis `c`): encode-once vs C x the binary cost -- the acceptance number;
+* honest wall time on the jit engine for both strategies.  The sequential
+  baseline reuses ONE compiled binary program across all C one-vs-rest
+  label vectors (same Copml instance, same scan shape), so the comparison
+  is steady-state field work, not compile noise; on this CPU host the
+  absolute times are noisy (shared cores) and the matrix GEMM's advantage
+  is smaller than the modeled-comm one -- both numbers are reported as
+  measured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+ITERS = 6
+REPS = 2
+_WL = "mnist10_like"
+
+
+def run(report) -> None:
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.core import cost_model
+    from repro.core.protocol import Copml
+
+    wl = api.get_workload(_WL)
+    n_classes = wl.objective.n_outputs
+
+    # ---------------------------------------------------- modeled comm
+    cw = cost_model.Workload(m=wl.m, d=wl.d, n=wl.n_clients, k=wl.cfg.k,
+                             t=wl.cfg.t, iters=ITERS, r=wl.cfg.r,
+                             c=n_classes)
+    once = cost_model.copml_costs(cw)
+    binary = cost_model.copml_costs(dataclasses.replace(cw, c=1))
+    seq_comm = n_classes * binary["comm_s"]
+    report("multiclass/modeled_comm_encode_once_s", once["comm_s"] * 1e6,
+           f"{once['comm_s']:.1f}s")
+    report("multiclass/modeled_comm_sequential_s", seq_comm * 1e6,
+           f"{n_classes}x_binary={seq_comm:.1f}s")
+    report("multiclass/modeled_comm_ratio", 0.0,
+           f"{seq_comm / once['comm_s']:.2f}x_encode_once_advantage")
+    report("multiclass/modeled_comp_encode_once_s", once["comp_s"] * 1e6,
+           f"{once['comp_s']:.2f}s_vs_seq_{n_classes * binary['comp_s']:.2f}s")
+
+    # ----------------------------------------------------- measured wall
+    def fit_multiclass():
+        return api.fit(_WL, "copml", "jit", key=0, iters=ITERS,
+                       history=False).wall_time_s
+
+    cx, cy = wl.client_data()
+    proto = Copml(wl.cfg, wl.m, wl.d)          # ONE binary driver: the scan
+    #                                            compiles once for all C fits
+    key = jax.random.PRNGKey(0)
+    class_labels = [[(np.asarray(c_y) == c).astype("float32")
+                     for c_y in cy] for c in range(n_classes)]
+
+    def fit_sequential():
+        t0 = time.perf_counter()
+        for c in range(n_classes):
+            proto.train(key, cx, class_labels[c], ITERS)
+        return time.perf_counter() - t0
+
+    fit_multiclass(), fit_sequential()          # compile + warm both
+    best_mc = best_seq = float("inf")
+    for _ in range(REPS):                       # interleaved best-of-reps
+        best_mc = min(best_mc, fit_multiclass())
+        best_seq = min(best_seq, fit_sequential())
+    report("multiclass/wall_encode_once", best_mc * 1e6,
+           f"{n_classes}_classes_{ITERS}_iters")
+    report("multiclass/wall_sequential", best_seq * 1e6,
+           f"{n_classes}_binary_fits_shared_compile")
+    report("multiclass/wall_ratio", 0.0, f"{best_seq / best_mc:.2f}x")
+
+    # honest end-to-end quality number for the same workload
+    res = api.fit(_WL, "copml", "jit", key=0, history=False)
+    report("multiclass/argmax_accuracy", res.wall_time_s * 1e6,
+           f"{res.final_accuracy:.4f}")

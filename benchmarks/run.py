@@ -2,13 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.run [--stage fig3,fig4,...]
     PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --stage engine --json
     PYTHONPATH=src python -m benchmarks.run --stage engine --json out.json
 
 Stages come from the STAGES registry (no hand-wired if/elif); each
 measurement row records the (workload, protocol, engine) run triple from
 the repro.api axes -- stages give a default triple, individual rows may
-override.  Output is ``name,us_per_call,derived`` CSV on stdout plus, with
---json, the full rows (triple included) as JSON.
+override.  Output is ``name,us_per_call,derived`` CSV on stdout plus,
+with --json, machine-readable trajectory files: one ``BENCH_<stage>.json``
+per executed stage (stage, default triple, rows with wall us_per_call and
+the derived strings carrying modeled comm/comp where the stage models
+them) written into the given directory (default ``.``) -- the per-PR
+artifact future sessions diff for perf regressions.  Passing a path
+ending in ``.json`` instead writes the legacy combined dump.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 import traceback
 from typing import Callable
@@ -38,8 +45,8 @@ class Stage:
 def build_stages() -> dict:
     """The stage registry, in execution order (kernel feeds fig3/table1)."""
     from . import (distributed_bench, fig3_speedup, fig4_accuracy,
-                   kernel_micro, resilience_bench, roofline_report,
-                   table1_breakdown, table2_complexity)
+                   kernel_micro, multiclass_bench, resilience_bench,
+                   roofline_report, table1_breakdown, table2_complexity)
 
     def kernel(report, ctx):
         ctx["field_macs_per_s"] = kernel_micro.run(report)
@@ -58,6 +65,10 @@ def build_stages() -> dict:
               lambda report, ctx: resilience_bench.run(report),
               ("smoke_straggler", "copml", "jit"),
               "wall time under FaultPlan churn vs fault-free baseline"),
+        Stage("multiclass",
+              lambda report, ctx: multiclass_bench.run(report),
+              ("mnist10_like", "copml", "jit"),
+              "encode-once C-class training vs C sequential binary fits"),
         Stage("fig4", lambda report, ctx: fig4_accuracy.run(report),
               ("fig4", "copml", "jit"),
               "accuracy parity vs plaintext (paper Fig. 4)"),
@@ -86,9 +97,12 @@ def main(argv=None) -> None:
     ap.add_argument("--stage", "--only", dest="stage", default=None,
                     help="comma-separated subset of registered stages "
                          "(--only kept as an alias)")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write all rows (with their "
-                         "(workload, protocol, engine) triple) as JSON")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR_OR_PATH",
+                    help="write machine-readable results: one "
+                         "BENCH_<stage>.json per executed stage into the "
+                         "given directory (default '.'); a path ending in "
+                         ".json writes the legacy combined dump instead")
     ap.add_argument("--list", action="store_true",
                     help="print the stage registry and exit")
     args = ap.parse_args(argv)
@@ -134,14 +148,41 @@ def main(argv=None) -> None:
             traceback.print_exc()
 
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"rows": rows,
-                       "failures": [list(f_) for f_ in failures]}, f,
-                      indent=1)
+        write_json(args.json, rows, failures, stages)
 
     if failures:
         print(f"{len(failures)} benchmark stages failed", file=sys.stderr)
         sys.exit(1)
+
+
+def write_json(target: str, rows: list, failures: list,
+               stages: dict) -> list:
+    """Persist benchmark rows as JSON; returns the file paths written.
+
+    target ending in '.json': one legacy combined dump.  Otherwise target
+    is a directory receiving one BENCH_<stage>.json trajectory file per
+    stage that produced rows (or failed) -- stable names so successive PRs
+    can diff the same stage's numbers."""
+    if target.endswith(".json"):
+        with open(target, "w") as f:
+            json.dump({"rows": rows,
+                       "failures": [list(f_) for f_ in failures]}, f,
+                      indent=1)
+        return [target]
+    os.makedirs(target, exist_ok=True)
+    paths = []
+    failed = {k: msg for k, msg in failures}
+    for key in sorted({r["stage"] for r in rows} | set(failed)):
+        path = os.path.join(target, f"BENCH_{key}.json")
+        with open(path, "w") as f:
+            json.dump({
+                "stage": key,
+                "triple": list(stages[key].triple),
+                "rows": [r for r in rows if r["stage"] == key],
+                "failure": failed.get(key),
+            }, f, indent=1)
+        paths.append(path)
+    return paths
 
 
 if __name__ == "__main__":

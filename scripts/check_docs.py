@@ -9,8 +9,9 @@ Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
    existing file (anchors are checked for same-file heading existence);
 3. the commands shown in README's Verify section reference real files;
 4. docs/API.md covers the live repro.api registries: every registered
-   protocol, engine, and workload name and every TrainResult field must
-   appear there (imports the package, so a stale doc fails the lint).
+   protocol, engine, workload, and objective name and every TrainResult
+   field must appear there (imports the package, so a stale doc fails the
+   lint).
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -116,6 +117,7 @@ def check_api() -> list:
         [("protocol", n) for n in api.protocol_names()]
         + [("engine", n) for n in api.ENGINES]
         + [("workload", n) for n in api.workload_names()]
+        + [("objective", n) for n in api.objective_names()]
         + [("TrainResult field", f.name)
            for f in dataclasses.fields(api.TrainResult)]
         + [("fault-injection name", n)

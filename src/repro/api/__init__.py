@@ -12,13 +12,26 @@ A run is fully specified by three orthogonal axes:
 
 Every fit returns the same TrainResult schema (opened model, per-step
 history, accuracy curve, wall time, modeled comm/comp cost), so the
-paper's Fig. 3/4 and Table I/II are pure formatting.  New protocols,
-workloads, and engines plug in via the registries
-(api.register_protocol / api.register_workload) without another bespoke
-driver -- see docs/API.md for the axes, registry names, and the
-migration table from the old Copml.train_* call conventions.
+paper's Fig. 3/4 and Table I/II are pure formatting.  A workload also
+carries a SecureObjective (core/objectives: binary logreg, linreg, or
+C-class one-vs-rest on a (d, C) matrix model) -- the model-specific slice
+every protocol consumes:
+
+    res = api.fit("mnist10_like", "copml", "jit")     # 10-class, coded
+    res.per_class_accuracy                            # (10,)
+
+New protocols, workloads, objectives, and engines plug in via the
+registries (api.register_protocol / api.register_workload /
+api.register_objective) without another bespoke driver -- see docs/API.md
+for the axes, registry names, and the migration table from the old
+Copml.train_* call conventions.
 """
 
+from ..core.objectives import (OBJECTIVES, SecureObjective,
+                               multiclass_logistic)
+from ..core.objectives import get as get_objective
+from ..core.objectives import names as objective_names
+from ..core.objectives import register as register_objective
 from .engine import EAGER, ENGINES, JIT, SHARDED, EngineSpec
 from .engine import parse as parse_engine
 from .faults import FaultPlan, FaultPlanViolation
@@ -32,9 +45,11 @@ from .workloads import names as workload_names
 from .workloads import register as register_workload
 
 __all__ = [
-    "EAGER", "ENGINES", "JIT", "PROTOCOLS", "SHARDED", "EngineSpec",
-    "FaultPlan", "FaultPlanViolation", "Protocol", "TrainResult",
-    "WORKLOADS", "Workload", "accuracy_curve", "accuracy_of", "fit",
-    "get_workload", "parse_engine", "protocol_names", "register_protocol",
+    "EAGER", "ENGINES", "JIT", "OBJECTIVES", "PROTOCOLS", "SHARDED",
+    "EngineSpec", "FaultPlan", "FaultPlanViolation", "Protocol",
+    "SecureObjective", "TrainResult", "WORKLOADS", "Workload",
+    "accuracy_curve", "accuracy_of", "fit", "get_objective", "get_workload",
+    "multiclass_logistic", "objective_names", "parse_engine",
+    "protocol_names", "register_objective", "register_protocol",
     "register_workload", "run_copml_engine", "workload_names",
 ]

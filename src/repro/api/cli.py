@@ -16,8 +16,11 @@ from . import workloads as workloads_mod
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("workload", nargs="?", default="quickstart",
+    ap.add_argument("workload", nargs="?", default=None,
                     help="registry name (see --list)")
+    ap.add_argument("--workload", dest="workload_flag", default=None,
+                    metavar="NAME",
+                    help="alternative spelling of the positional workload")
     ap.add_argument("--protocol", default="copml",
                     choices=sorted(PROTOCOLS))
     ap.add_argument("--engine", default="jit",
@@ -37,11 +40,20 @@ def main(argv=None) -> None:
     ap.add_argument("--list", action="store_true",
                     help="print the three registries and exit")
     args = ap.parse_args(argv)
+    if args.workload_flag is not None:
+        if args.workload is not None:
+            ap.error("give the workload positionally OR via --workload, "
+                     "not both")
+        args.workload = args.workload_flag
+    if args.workload is None:
+        args.workload = "quickstart"
 
     if args.list:
-        print("workloads:", ", ".join(workload_names()))
-        print("protocols:", ", ".join(sorted(PROTOCOLS)))
-        print("engines:  ", ", ".join(ENGINES))
+        from . import objective_names
+        print("workloads: ", ", ".join(workload_names()))
+        print("protocols: ", ", ".join(sorted(PROTOCOLS)))
+        print("engines:   ", ", ".join(ENGINES))
+        print("objectives:", ", ".join(objective_names()))
         return
 
     plan = None

@@ -18,6 +18,10 @@ and the Fig. 3/4 / Table I artifacts are pure formatting of TrainResults):
                 COPML-coded secure aggregation of the exchange
                 (core/secure_agg).  eager | jit.
 
+Every protocol consumes the workload's SecureObjective (core/objectives):
+the same registry trains binary logreg, linear regression, and multi-class
+one-vs-rest matrix models with no protocol-specific casing beyond shapes.
+
 All protocol drivers and dataset arrays are cached per (hashable)
 Workload, so repeated fits of the same shape reuse compiled programs.
 """
@@ -30,6 +34,7 @@ import jax
 import numpy as np
 
 from ..core import baselines, cost_model, secure_agg
+from ..core import objectives as objectives_mod
 from ..core.protocol import Copml
 from ..train import elastic
 from . import engine as engine_mod
@@ -144,13 +149,16 @@ class Protocol:
 
         hist = None if hist is None else np.asarray(hist)
         x_eval, y_eval = wl.eval_set()
-        acc = None if hist is None else result_mod.accuracy_curve(
-            hist, x_eval, y_eval)
+        obj = wl.objective        # objective-defined scoring: accuracy for
+        #                           the logistic objectives, R^2 for linreg
+        acc = None if hist is None else np.asarray(
+            [obj.score(w_t, x_eval, y_eval) for w_t in hist])
         return result_mod.TrainResult(
             workload=wl.name, protocol=self.name, engine=spec.label,
             iters=iters, weights=w, wall_time_s=wall, history=hist,
             accuracy=acc,
-            final_accuracy=result_mod.accuracy_of(w, x_eval, y_eval),
+            final_accuracy=obj.score(w, x_eval, y_eval),
+            per_class_accuracy=obj.per_class_accuracy(w, x_eval, y_eval),
             cost=self.cost(wl, iters), state=state,
             availability=None if plan is None else plan.available.copy())
 
@@ -196,16 +204,18 @@ class Protocol:
     def _cost_workload(self, wl, iters: int) -> cost_model.Workload:
         return cost_model.Workload(m=wl.m, d=wl.d, n=wl.n_clients,
                                    k=wl.cfg.k, t=wl.cfg.t, iters=iters,
-                                   r=wl.cfg.r)
+                                   r=wl.cfg.r, c=wl.objective.n_outputs)
 
 
-def _stack_history(rows, d: int):
-    """Collected eager-engine history rows -> the same (iters, d) array the
-    scan engines produce (None stays None; zero iterations give (0, d), not
-    None, so the TrainResult schema is engine-independent)."""
+def _stack_history(rows, w_shape):
+    """Collected eager-engine history rows -> the same (iters,) + w_shape
+    array the scan engines produce (None stays None; zero iterations give
+    (0,) + w_shape, not None, so the TrainResult schema is
+    engine-independent)."""
     if rows is None:
         return None
-    return np.stack(rows) if rows else np.zeros((0, d), np.float32)
+    return np.stack(rows) if rows else \
+        np.zeros((0,) + tuple(w_shape), np.float32)
 
 
 def _history_recorder(history: bool):
@@ -248,7 +258,7 @@ def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
         state, w = proto._train_eager(
             key, client_xs, client_ys, iters, subset=subset,
             callback=cb if (history or callback) else None, **fault_kw)
-        return state, w, _stack_history(hist_rows, proto.d)
+        return state, w, _stack_history(hist_rows, proto.w_shape)
     if callback is not None:
         raise ValueError("callback is only supported on the eager engine")
     if spec.kind == "jit":
@@ -278,7 +288,8 @@ class CopmlProtocol(Protocol):
         """The (cached) Copml instance for a workload -- caching keeps the
         per-instance jit/scan caches warm across fit() calls."""
         if wl not in self._drivers:
-            self._drivers[wl] = Copml(wl.cfg, wl.m, wl.d)
+            self._drivers[wl] = Copml(wl.cfg, wl.m, wl.d,
+                                      objective=wl.objective)
         return self._drivers[wl]
 
     def fault_threshold(self, wl) -> int:
@@ -318,7 +329,8 @@ class MpcBaselineProtocol(Protocol):
     def driver(self, wl) -> baselines.MpcBaseline:
         if wl not in self._drivers:
             self._drivers[wl] = baselines.MpcBaseline(
-                wl.cfg, wl.m, wl.d, groups=self.groups, scheme=self.scheme)
+                wl.cfg, wl.m, wl.d, groups=self.groups, scheme=self.scheme,
+                objective=wl.objective)
         return self._drivers[wl]
 
     def _run(self, wl, spec, key, iters, subset, history, plan=None):
@@ -330,7 +342,7 @@ class MpcBaselineProtocol(Protocol):
                 (out[1], None, out[0])
         rows, cb = _history_recorder(history)
         state, w = mb.train(key, x, y, iters, callback=cb)
-        return w, _stack_history(rows, wl.d), state
+        return w, _stack_history(rows, wl.w_shape), state
 
     def cost(self, wl, iters):
         return cost_model.mpc_baseline_costs(
@@ -340,33 +352,47 @@ class MpcBaselineProtocol(Protocol):
 
 class FloatProtocol(Protocol):
     name = "float"
+    poly = False        # PolyFloatProtocol flips this: same float engine,
+    #                     ghat's polynomial instead of the exact activation
 
     def _run(self, wl, spec, key, iters, subset, history, plan=None):
         x, y, _, _ = wl.data()
-        eta = wl.cfg.eta
+        obj, eta = wl.objective, wl.cfg.eta
+        r, bound = wl.cfg.r, wl.cfg.sigmoid_bound
+        if not isinstance(obj, objectives_mod.BinaryLogistic):
+            # objective-generic float GD (vector or matrix model)
+            if spec.kind == "jit":
+                w, hist = baselines.float_objective_scan(
+                    obj, x, y, eta, iters, history=history, poly=self.poly,
+                    r=r, bound=bound)
+                return w, hist, None
+            rows, cb = _history_recorder(history)
+            w = baselines.float_objective_train(
+                obj, x, y, eta, iters, callback=cb, poly=self.poly, r=r,
+                bound=bound)
+            return w, _stack_history(rows, wl.w_shape), None
+        # the paper's binary path keeps its dedicated (pre-objective)
+        # trainers -- their compiled programs are shared across the suite
         if spec.kind == "jit":
-            w, hist = baselines.float_logreg_scan(x, y, eta, iters,
-                                                  history=history)
+            if self.poly:
+                w, hist = baselines.float_poly_logreg_scan(
+                    x, y, eta, iters, r=r, bound=bound, history=history)
+            else:
+                w, hist = baselines.float_logreg_scan(x, y, eta, iters,
+                                                      history=history)
             return w, hist, None
         rows, cb = _history_recorder(history)
-        w = baselines.float_logreg(x, y, eta, iters, callback=cb)
-        return w, _stack_history(rows, wl.d), None
+        if self.poly:
+            w = baselines.float_poly_logreg(x, y, eta, iters, r=r,
+                                            bound=bound, callback=cb)
+        else:
+            w = baselines.float_logreg(x, y, eta, iters, callback=cb)
+        return w, _stack_history(rows, wl.w_shape), None
 
 
-class PolyFloatProtocol(Protocol):
+class PolyFloatProtocol(FloatProtocol):
     name = "poly_float"
-
-    def _run(self, wl, spec, key, iters, subset, history, plan=None):
-        x, y, _, _ = wl.data()
-        eta, r, bound = wl.cfg.eta, wl.cfg.r, wl.cfg.sigmoid_bound
-        if spec.kind == "jit":
-            w, hist = baselines.float_poly_logreg_scan(
-                x, y, eta, iters, r=r, bound=bound, history=history)
-            return w, hist, None
-        rows, cb = _history_recorder(history)
-        w = baselines.float_poly_logreg(x, y, eta, iters, r=r, bound=bound,
-                                        callback=cb)
-        return w, _stack_history(rows, wl.d), None
+    poly = True
 
 
 class SecureAggProtocol(Protocol):
@@ -403,16 +429,18 @@ class SecureAggProtocol(Protocol):
         cx, cy = wl.client_data()
         cfg, eta = self.agg_config(wl), wl.cfg.eta
         step_subsets = None if plan is None else plan.subsets(cfg.t + 1)
+        obj = wl.objective
         if spec.kind == "jit":
             w, hist = secure_agg.secure_logreg_scan(
                 key, cx, cy, cfg, eta, iters, subset=subset,
-                history=history, step_subsets=step_subsets)
+                history=history, step_subsets=step_subsets, objective=obj)
             return w, hist, cfg
         rows, cb = _history_recorder(history)
         w = secure_agg.secure_logreg(key, cx, cy, cfg, eta, iters,
                                      subset=subset, callback=cb,
-                                     step_subsets=step_subsets)
-        return w, _stack_history(rows, wl.d), cfg
+                                     step_subsets=step_subsets,
+                                     objective=obj)
+        return w, _stack_history(rows, wl.w_shape), cfg
 
 
 register(CopmlProtocol())

@@ -15,8 +15,18 @@ from ..core.baselines import sigmoid
 
 
 def accuracy_of(w, x, y) -> float:
-    """Binary accuracy of model w on (x, y)."""
-    z = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    """Binary accuracy of a VECTOR model w on (x, y).
+
+    Legacy helper predating the objective layer; fit() itself scores via
+    the workload's objective.  Matrix models must go through
+    `workload.objective.score` (argmax semantics), so they are rejected
+    here instead of broadcasting into a meaningless mean."""
+    w = np.asarray(w, np.float64)
+    if w.ndim != 1:
+        raise ValueError(
+            f"accuracy_of scores (d,) vector models; got shape {w.shape} -- "
+            f"score matrix models with workload.objective.score(w, x, y)")
+    z = np.asarray(x, np.float64) @ w
     return float(((sigmoid(z) > 0.5) == np.asarray(y)).mean())
 
 
@@ -29,11 +39,20 @@ def accuracy_curve(history, x, y) -> np.ndarray:
 class TrainResult:
     """What a fit() returns, protocol- and engine-independent.
 
-    weights        final opened model, float (d,)
-    history        opened model after every step, float (iters, d), or None
-                   when the run was asked not to keep it
-    accuracy       per-step eval accuracy (iters,), or None without history
-    final_accuracy accuracy of `weights` on the workload's eval set
+    weights        final opened model, float: (d,) for vector objectives,
+                   (d, C) for a multi-class one-vs-rest matrix model
+    history        opened model after every step, float (iters,) + the
+                   model shape, or None when the run was asked not to keep
+                   it
+    accuracy       per-step eval score (iters,), or None without history;
+                   the workload's objective defines the score (binary /
+                   argmax accuracy for the logistic objectives, R^2 for
+                   linreg)
+    final_accuracy score of `weights` on the workload's eval set
+    per_class_accuracy
+                   (C,) per-class accuracy of `weights` for multi-class
+                   objectives (NaN where the eval set has no examples of a
+                   class), None for vector objectives
     wall_time_s    end-to-end wall time of the run (setup + train + open;
                    includes compilation on the first fit of a given shape)
     cost           modeled per-client comm/comp/enc seconds on the paper's
@@ -54,6 +73,7 @@ class TrainResult:
     history: np.ndarray | None = None
     accuracy: np.ndarray | None = None
     final_accuracy: float | None = None
+    per_class_accuracy: np.ndarray | None = None
     cost: dict | None = None
     state: object = None
     availability: np.ndarray | None = None
@@ -68,6 +88,10 @@ class TrainResult:
                  f"{self.iters} iters in {self.wall_time_s:.2f}s"]
         if self.final_accuracy is not None:
             parts.append(f"accuracy {self.final_accuracy:.3f}")
+        if self.per_class_accuracy is not None:
+            worst = np.nanmin(self.per_class_accuracy)
+            parts.append(f"(worst class {worst:.3f} "
+                         f"of {len(self.per_class_accuracy)})")
         if self.cost is not None:
             parts.append(f"modeled total {self.cost['total_s']:.0f}s "
                          f"(comm {self.cost['comm_s']:.0f}s)")

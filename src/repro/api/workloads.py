@@ -20,6 +20,7 @@ import dataclasses
 import numpy as np
 
 from ..configs import copml_logreg
+from ..core import objectives
 from ..core.protocol import (CopmlConfig, case1_params, case2_params,
                              derive_update_constants)
 from ..data import pipeline
@@ -38,15 +39,25 @@ class Workload:
     test_m: int = 0             # held-out eval rows (0 = eval on train)
     iters: int = 30             # default GD iterations
     subset: tuple | None = None  # default straggler subset (decode clients)
+    objective: objectives.SecureObjective = objectives.BINARY_LOGISTIC
+    # the model family (core/objectives): binary logreg (default, the
+    # paper's task), linreg, or C-class one-vs-rest on a (d, C) matrix
 
     @property
     def n_clients(self) -> int:
         return self.cfg.n_clients
 
+    @property
+    def w_shape(self) -> tuple:
+        """The opened model's shape: (d,) or (d, C)."""
+        return self.objective.w_shape(self.d)
+
     def data(self):
         """(x, y, x_test, y_test); the eval pair is (None, None) when
         test_m == 0.  Cached: repeated fits reuse the same arrays."""
-        return _dataset(self.m, self.d, self.seed, self.margin, self.test_m)
+        return _dataset(self.m, self.d, self.seed, self.margin, self.test_m,
+                        self.objective.dataset_kind,
+                        self.objective.n_outputs)
 
     def eval_set(self):
         """The eval pair accuracy curves are scored against: the held-out
@@ -63,11 +74,19 @@ class Workload:
 _DATA_CACHE: dict = {}
 
 
-def _dataset(m, d, seed, margin, test_m):
-    key = (m, d, seed, margin, test_m)
+def _dataset(m, d, seed, margin, test_m, kind="binary", n_outputs=1):
+    key = (m, d, seed, margin, test_m, kind, n_outputs)
     if key not in _DATA_CACHE:
-        out = pipeline.classification_dataset(m=m, d=d, seed=seed,
-                                              margin=margin, test_m=test_m)
+        if kind == "multiclass":
+            out = pipeline.multiclass_dataset(m=m, d=d, n_classes=n_outputs,
+                                              seed=seed, margin=margin,
+                                              test_m=test_m)
+        elif kind == "regression":
+            out = pipeline.regression_dataset(m=m, d=d, seed=seed,
+                                              test_m=test_m)
+        else:
+            out = pipeline.classification_dataset(
+                m=m, d=d, seed=seed, margin=margin, test_m=test_m)
         if not test_m:
             out = (out[0], out[1], None, None)
         for arr in out:                 # the cache is shared across fits:
@@ -128,6 +147,14 @@ register(Workload("gisette_like", m=480, d=128,
 # straggler demo: K=3, T=1 at N=13 leaves R=10 < N; decode from the LAST R
 register(Workload("smoke_straggler", m=96, d=12, cfg=_cfg(13, 3, 1), iters=4,
                   subset=tuple(range(3, 13))))
+# non-binary objectives: 10-class one-vs-rest on a (d, 10) field matrix
+# (dataset encoded ONCE for all 10 classes -- the encode-once/class-batch
+# path), and linear regression (ghat(z) = z exactly, r = 1)
+register(Workload("mnist10_like", m=390, d=24, cfg=_cfg(13, *case1_params(13)),
+                  seed=7, margin=3.0, test_m=130, iters=25,
+                  objective=objectives.get("ovr10")))
+register(Workload("linreg_smoke", m=96, d=12, cfg=_cfg(13, *case1_params(13)),
+                  seed=3, iters=12, objective=objectives.LINREG))
 
 def _field_safe_cfg(cfg: CopmlConfig, m: int, name: str) -> CopmlConfig:
     """Keep the paper's eta when the derived truncation depth fits the

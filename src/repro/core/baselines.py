@@ -16,14 +16,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import field, mpc, quantize, shamir, sigmoid_approx, truncation
-from .protocol import CopmlConfig, derive_update_constants
+from . import field, mpc, objectives, quantize, shamir, sigmoid_approx, \
+    truncation
+from .protocol import CopmlConfig  # noqa: F401  (re-exported for callers)
 
 
 def sigmoid(z):
@@ -98,28 +98,103 @@ def float_poly_logreg_scan(x, y, eta: float, iters: int, r: int = 1,
     return _float_scan(x, y, eta, iters, ghat, history)
 
 
+# -------------------------------------------- objective-generic float GD
+#
+# The logreg-named trainers above predate the SecureObjective split and
+# stay as-is (they back the paper's Fig.-4 comparisons and their compiled
+# programs are cached across the suite).  The generic pair below drives
+# the float / poly_float protocols for every OTHER objective: the model
+# may be a (d,) vector or a (d, C) matrix; the gradient is always
+# X^T (g(XW) - Y) / m with g the exact activation or its degree-r
+# polynomial fit, columnwise -- the float twin of the coded pipeline.
+
+
+def float_objective_train(obj, x, y, eta: float, iters: int, callback=None,
+                          *, poly: bool = False, r: int = 1,
+                          bound: float = 10.0):
+    """Plaintext GD for any SecureObjective (numpy float64 loop)."""
+    x = np.asarray(x, np.float64)
+    targets = np.asarray(obj.prepare_targets(y), np.float64)
+    m = x.shape[0]
+    coeffs = obj.float_coeffs(r, bound) if poly else None
+    w = np.zeros(obj.w_shape(x.shape[1]))
+    for t in range(iters):
+        z = x @ w
+        g = sigmoid_approx.poly_eval_float(coeffs, z) if poly \
+            else obj.act_np(z)
+        w = w - eta / m * (x.T @ (g - targets))
+        if callback is not None:
+            callback(t, w)
+    return w
+
+
+def float_objective_scan(obj, x, y, eta: float, iters: int,
+                         history: bool = True, *, poly: bool = False,
+                         r: int = 1, bound: float = 10.0):
+    """float_objective_train as one compiled lax.scan (float32 on-device);
+    returns (w, history-or-None).  `obj` is static (hashable frozen
+    dataclass), so each objective compiles once.  Target preparation
+    (e.g. one-hot) is host-side numpy, hence outside the jit."""
+    targets = np.asarray(obj.prepare_targets(y), np.float32)
+    return _float_objective_jit(obj, jnp.asarray(x, jnp.float32),
+                                jnp.asarray(targets), float(eta), int(iters),
+                                bool(history), bool(poly), int(r),
+                                float(bound))
+
+
+@partial(jax.jit, static_argnames=("obj", "eta", "iters", "history", "poly",
+                                   "r", "bound"))
+def _float_objective_jit(obj, xj, yj, eta: float, iters: int,
+                         history: bool, poly: bool, r: int, bound: float):
+    m = xj.shape[0]
+    coeffs = obj.float_coeffs(r, bound) if poly else None
+
+    def g_fn(z):
+        if not poly:
+            return obj.act_jnp(z)
+        acc = jnp.full_like(z, float(coeffs[-1]))
+        for c in coeffs[-2::-1]:
+            acc = acc * z + float(c)
+        return acc
+
+    def body(w, _):
+        w = w - (eta / m) * (xj.T @ (g_fn(xj @ w) - yj))
+        return w, (w if history else None)
+
+    w0 = jnp.zeros(obj.w_shape(xj.shape[1]), jnp.float32)
+    return jax.lax.scan(body, w0, None, length=iters)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class MpcState:
-    w_shares: jnp.ndarray      # (N, d) model shares (shared across all groups)
+    w_shares: jnp.ndarray      # (N_g, d, C') model shares (all groups share)
     x_shares: jnp.ndarray      # (G, N_g, m/G, d) per-subgroup data shares
-    xty_shares: jnp.ndarray    # (G, N_g, d)
+    xty_shares: jnp.ndarray    # (G, N_g, d, C')
     step: jnp.ndarray | int = 0
 
 
 class MpcBaseline:
-    """Secret-shared logistic regression per Appendix D (G subgroups)."""
+    """Secret-shared GD per Appendix D (G subgroups), objective-generic.
+
+    The model always carries a trailing output axis C' (= 1 for the vector
+    objectives, C for multi-class one-vs-rest), so every secure matmul and
+    the share-domain Horner chain are written once; the binary path draws
+    the same randomness volume per call as the pre-objective code."""
 
     def __init__(self, cfg: CopmlConfig, m: int, d: int, groups: int = 3,
-                 scheme: str = "bh08"):
+                 scheme: str = "bh08", objective=None):
         self.cfg, self.m, self.d, self.g = cfg, m, d, groups
+        self.obj = objectives.BINARY_LOGISTIC if objective is None \
+            else objective
+        self.obj.validate_cfg(cfg)
+        self.c_out = self.obj.n_outputs          # trailing model axis C'
         self.n_g = cfg.n_clients // groups      # clients per subgroup
         assert self.n_g >= 2 * cfg.t + 1, "subgroup too small for 2T+1"
         self.lambdas = tuple(range(1, self.n_g + 1))
-        self.q_eta, self.e, self.k1, self.k2 = derive_update_constants(cfg, m)
-        scales = [cfg.lg - i * cfg.lz for i in range(cfg.r + 1)]
-        self.poly_coeffs = sigmoid_approx.quantized_coeffs(
-            cfg.r, cfg.lx, scales, cfg.sigmoid_bound)
+        self.q_eta, self.e, self.k1, self.k2 = self.obj.update_constants(
+            cfg, m)
+        self.poly_coeffs = self.obj.field_coeffs(cfg)
         self._mul = mpc.mul_bh08 if scheme == "bh08" else mpc.mul_bgw
         self.scheme = scheme
 
@@ -128,21 +203,23 @@ class MpcBaseline:
         per = self.m // self.g
         keys = jax.random.split(key, 2 * self.g + 1)
         xq = quantize.quantize(jnp.asarray(x[: per * self.g]), cfg.lx)
-        yq = quantize.quantize(
-            jnp.asarray(y[: per * self.g], jnp.float32), cfg.lg)
+        targets = self.obj.prepare_targets(np.asarray(y)[: per * self.g])
+        yq = quantize.quantize(jnp.asarray(targets, jnp.float32), cfg.lg)
         xg = xq.reshape(self.g, per, self.d)
-        yg = yq.reshape(self.g, per)
+        yg = yq.reshape((self.g, per) + self.obj.out_shape)
         x_shares, xty = [], []
         for gi in range(self.g):
             xs = shamir.share(keys[2 * gi], xg[gi], cfg.t, self.n_g,
                               self.lambdas)
             ys = shamir.share(keys[2 * gi + 1], yg[gi], cfg.t, self.n_g,
                               self.lambdas)
+            ys_mat = ys if self.obj.out_shape else ys[..., None]
             x_shares.append(xs)
             xty.append(self._mul(
-                keys[2 * gi], jnp.swapaxes(xs, 1, 2), ys[..., None],
-                cfg.t, matmul=True, points=self.lambdas)[..., 0])
-        w = shamir.share(keys[-1], jnp.zeros((self.d,), field.FIELD_DTYPE),
+                keys[2 * gi], jnp.swapaxes(xs, 1, 2), ys_mat,
+                cfg.t, matmul=True, points=self.lambdas))  # (N_g, d, C')
+        w = shamir.share(keys[-1],
+                         jnp.zeros((self.d, self.c_out), field.FIELD_DTYPE),
                          cfg.t, self.n_g, self.lambdas)
         return MpcState(w_shares=w, x_shares=jnp.stack(x_shares),
                         xty_shares=jnp.stack(xty))
@@ -155,12 +232,10 @@ class MpcBaseline:
         grad_shares = None
         for gi in range(self.g):
             xs = state.x_shares[gi]                       # (N_g, mG, d)
-            # z = X w : secure matmul (degree reduction!)
-            z = self._mul(keys[gi], xs, jnp.broadcast_to(
-                state.w_shares[:, :, None],
-                (self.n_g, self.d, 1)), cfg.t, matmul=True,
-                points=self.lambdas)[..., 0]              # (N_g, mG)
-            # ghat(z) in the share domain: Horner => r secure mults
+            # Z = X W : secure matmul (degree reduction!), all C' columns
+            z = self._mul(keys[gi], xs, state.w_shares, cfg.t, matmul=True,
+                          points=self.lambdas)            # (N_g, mG, C')
+            # ghat(Z) in the share domain: Horner => r secure mults
             acc = jnp.full_like(z, int(self.poly_coeffs[-1]))
             for ci in range(len(self.poly_coeffs) - 2, -1, -1):
                 acc = self._mul(jax.random.fold_in(keys[gi], ci), acc, z,
@@ -168,9 +243,9 @@ class MpcBaseline:
                 acc = mpc.add_public(acc, int(self.poly_coeffs[ci]))
             # X^T ghat : secure matmul
             xtg = self._mul(jax.random.fold_in(keys[gi], 99),
-                            jnp.swapaxes(xs, 1, 2), acc[..., None],
+                            jnp.swapaxes(xs, 1, 2), acc,
                             cfg.t, matmul=True,
-                            points=self.lambdas)[..., 0]  # (N_g, d)
+                            points=self.lambdas)          # (N_g, d, C')
             g_sh = field.sub(xtg, state.xty_shares[gi])
             grad_shares = g_sh if grad_shares is None else field.add(
                 grad_shares, g_sh)
@@ -209,7 +284,8 @@ class MpcBaseline:
 
     def open_model(self, state: MpcState):
         w = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
-        return quantize.dequantize(w, self.cfg.lw)
+        w = quantize.dequantize(w, self.cfg.lw)       # (d, C')
+        return w[..., 0] if not self.obj.out_shape else w
 
 
 @partial(jax.jit, static_argnames=("mb", "iters", "history"))

@@ -6,6 +6,12 @@ axis first.  Each step below is annotated with its MPC character
 + reconstruct), which cost_model.py prices for the Fig-3/Table-I benchmarks,
 and which launch/copml_dist.py maps onto mesh collectives.
 
+The model-specific slice (gradient polynomial, target embedding, model
+shape, update constants) comes from a core/objectives.SecureObjective:
+the phases are shape-polymorphic over the objective's trailing model dims
+(a (d,) vector for binary logreg / linreg, a (d, C) matrix for C-class
+one-vs-rest trained on ONE dataset encoding).
+
 Fixed-point scale plumbing (the part the paper leaves implicit, Appendix A):
 
   X quantized at 2^lx, w at 2^lw  =>  z = Xw at lz = lx+lw.
@@ -33,7 +39,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from . import field, lagrange, meshutil, mpc, quantize, shamir, sigmoid_approx, truncation
+from . import (field, lagrange, meshutil, mpc, objectives, quantize, shamir,
+               truncation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,10 +99,25 @@ def case1_params(n: int, r: int = 1) -> tuple:
 
 
 def case2_params(n: int, r: int = 1) -> tuple:
-    """Paper Case 2 (equal split), stated for r=1:
-    T = floor((N-3)/6), K = floor((N+2)/3) - T."""
-    t = max(1, (n - 3) // 6)
-    k = max(1, (n + 2) // 3 - t)
+    """Paper Case 2 (equal split between parallelization and privacy).
+
+    Stated in the paper for r=1 as T = floor((N-3)/6),
+    K = floor((N+2)/3) - T.  The general-r form keeps the same structure:
+    K+T-1 = floor((N-1)/(2r+1)) (the largest budget the recovery threshold
+    (2r+1)(K+T-1)+1 <= N allows, since floor((N+2r)/(2r+1)) equals
+    floor((N-1)/(2r+1)) + 1) with T taking roughly half of it; at r=1 it
+    reduces exactly to the published formula.  Raises ValueError when no
+    valid equal split exists (N too small for this r).
+    """
+    if r < 1:
+        raise ValueError(f"polynomial degree r must be >= 1, got {r}")
+    deg = 2 * r + 1
+    t = max(1, (n - 3) // (2 * deg))
+    k = max(1, (n + 2 * r) // deg - t)
+    if deg * (k + t - 1) + 1 > n:
+        raise ValueError(
+            f"case 2 has no valid (K, T) for N={n}, r={r}: the recovery "
+            f"threshold {deg * (k + t - 1) + 1} = (2r+1)(K+T-1)+1 exceeds N")
     return k, t
 
 
@@ -115,28 +137,44 @@ def derive_update_constants(cfg: CopmlConfig, m: int) -> tuple:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class CopmlState:
-    """Everything clients hold after the one-time setup."""
-    w_shares: jnp.ndarray        # (N, d)       Shamir shares of w^(t)
-    coded_x: jnp.ndarray         # (N, mk, d)   clear coded slices X~_i
-    xty_shares: jnp.ndarray      # (N, d)       shares of X^T y (scale lx+lg)
+    """Everything clients hold after the one-time setup.
+
+    `w_shape` is the objective's model shape: (d,) for the vector
+    objectives (binary logreg, linreg -- unchanged from the pre-objective
+    protocol), (d, C) for the class-batched matrix model."""
+    w_shares: jnp.ndarray        # (N,) + w_shape   Shamir shares of w^(t)
+    coded_x: jnp.ndarray         # (N, mk, d)       clear coded slices X~_i
+    xty_shares: jnp.ndarray      # (N,) + w_shape   shares of X^T y (lx+lg)
     step: jnp.ndarray | int = 0
 
 
 class Copml:
-    """Functional COPML protocol driver (jit-friendly)."""
+    """Functional COPML protocol driver (jit-friendly).
 
-    def __init__(self, cfg: CopmlConfig, m: int, d: int):
+    `objective` (core/objectives.SecureObjective, default binary logistic)
+    supplies everything model-specific: the quantized ghat coefficients,
+    the target embedding, the model shape, and the update constants.  The
+    phases below are shape-polymorphic over the objective's trailing model
+    dims -- the binary path draws/reshapes exactly the pre-objective
+    shapes, so it stays bit-exact to the seed goldens."""
+
+    def __init__(self, cfg: CopmlConfig, m: int, d: int, objective=None):
         cfg.validate()
         self.cfg = cfg
         self.m, self.d = m, d
+        self.obj = objectives.BINARY_LOGISTIC if objective is None \
+            else objective
+        self.obj.validate_cfg(cfg)
+        self.out_shape = self.obj.out_shape      # () vector, (C,) matrix
+        self.w_shape = (d,) + self.out_shape
+        self.dw = d * self.obj.n_outputs         # flattened model width
         n, k, t = cfg.n_clients, cfg.k, cfg.t
         self.alphas, self.betas = lagrange.default_points(n, k, t)
         self.lambdas = tuple(range(k + t + 1 + n, k + t + 1 + 2 * n))
-        self.q_eta, self.e, self.k1, self.k2 = derive_update_constants(cfg, m)
+        self.q_eta, self.e, self.k1, self.k2 = self.obj.update_constants(
+            cfg, m)
         # field coefficients of ghat at output scale lg given input scale lz
-        scales = [cfg.lg - i * cfg.lz for i in range(cfg.r + 1)]
-        self.poly_coeffs = sigmoid_approx.quantized_coeffs(
-            cfg.r, cfg.lx, scales, cfg.sigmoid_bound)
+        self.poly_coeffs = self.obj.field_coeffs(cfg)
         self._mul = mpc.mul_bh08 if cfg.mpc_mul == "bh08" else mpc.mul_bgw
 
     # ------------------------------------------------------------------ setup
@@ -157,18 +195,21 @@ class Copml:
         cfg, n = self.cfg, self.cfg.n_clients
         keys = jax.random.split(key, 6)
 
-        # Phase 1 (LOCAL): quantize into F_p -- one call over all rows
+        # Phase 1 (LOCAL): quantize into F_p -- one call over all rows.
+        # The objective owns the target embedding (binary {0,1} passes
+        # through; multiclass one-hots integer labels into (m, C)).
         xq = quantize.quantize(
             jnp.concatenate([jnp.asarray(x) for x in client_xs], axis=0),
             cfg.lx)                                           # (m, d)
-        yq = quantize.quantize(
-            jnp.concatenate([jnp.asarray(y, jnp.float32) for y in client_ys],
-                            axis=0), cfg.lg)                  # (m,)
+        targets = self.obj.prepare_targets(
+            np.concatenate([np.asarray(y) for y in client_ys], axis=0))
+        yq = quantize.quantize(jnp.asarray(targets, jnp.float32), cfg.lg)
+        # (m,) + out_shape
 
         # Phase 2a (EXCHANGE): Shamir-share every client's data (batched)
         x_shares = shamir.share(keys[0], xq, cfg.t, n, self.lambdas)
         y_shares = shamir.share(keys[1], yq, cfg.t, n, self.lambdas)
-        # (N, m, d) / (N, m)
+        # (N, m, d) / (N, m) + out_shape
 
         # Phase 2b (LOCAL on shares): partition rows into K blocks
         blocks, self.pad = jax.vmap(
@@ -187,15 +228,19 @@ class Copml:
         # enc: (N_holder, N_owner, mk, d); reconstruct over holders
         coded_x = shamir.reconstruct(enc, cfg.t, self.lambdas)  # (N, mk, d)
 
-        # Phase 2d: X^T y via one secure matmul (degree reduction included)
+        # Phase 2d: X^T y via one secure matmul (degree reduction included);
+        # a matrix objective contracts against all C target columns at once
+        y_mat = y_shares if self.out_shape else y_shares[..., None]
         xty_shares = self._mul(
             keys[4],
-            jnp.swapaxes(x_shares, 1, 2), y_shares[..., None],
-            cfg.t, matmul=True, points=self.lambdas)[..., 0]    # (N, d)
+            jnp.swapaxes(x_shares, 1, 2), y_mat,
+            cfg.t, matmul=True, points=self.lambdas)     # (N, d, C')
+        if not self.out_shape:
+            xty_shares = xty_shares[..., 0]              # (N,) + w_shape
 
         # model init within MPC: w^(0) = 0 shared
         w_shares = shamir.share(
-            keys[5], jnp.zeros((self.d,), field.FIELD_DTYPE),
+            keys[5], jnp.zeros(self.w_shape, field.FIELD_DTYPE),
             cfg.t, n, self.lambdas)
         return CopmlState(w_shares=w_shares, coded_x=coded_x,
                           xty_shares=xty_shares,
@@ -214,13 +259,18 @@ class Copml:
         # distinct keys: drawing v and its sharing polynomial from the same
         # key makes the sharing coefficients EQUAL v (same threefry stream),
         # letting any single share reveal the mask
-        v = field.random_field(kv, (cfg.t, self.d))
-        v_shares = shamir.share(ks, v, cfg.t, n, self.lambdas)  # (N,T,d)
+        v = field.random_field(kv, (cfg.t,) + self.w_shape)
+        v_shares = shamir.share(ks, v, cfg.t, n, self.lambdas)  # (N,T)+w_shape
+        # LCC encoding is elementwise-linear: flatten the trailing model
+        # dims so vector and matrix models share one encode path (dw = d
+        # for the vector objectives -- these reshapes are no-ops there)
+        w_flat = w_shares.reshape(n, self.dw)
+        v_flat = v_shares.reshape(n, cfg.t, self.dw)
         blocks = jnp.broadcast_to(
-            w_shares[:, None], (n, cfg.k, self.d))               # same w in K slots
+            w_flat[:, None], (n, cfg.k, self.dw))                # same w in K slots
         enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
             b[:, None, :], vv[:, None, :], self.alphas, self.betas
-        )[:, 0, :])(blocks, v_shares)                            # (N_holder,N_owner,d)
+        )[:, 0, :])(blocks, v_flat)                              # (N_holder,N_owner,dw)
         # keep enc holder-sharded: otherwise GSPMD all-gathers every
         # holder's (K+T, d) limb stack (~1 GiB/step at N=256, the dominant
         # collective of the baseline -- EXPERIMENTS.md Perf, COPML iter 2);
@@ -233,13 +283,24 @@ class Copml:
         """Phase 3 (LOCAL, the hot loop): f(X~_i, w~_i) = X~_i^T ghat(X~_i w~_i).
 
         Pure field compute on *clear coded* data.  All N clients run in ONE
-        batched call (kernels/ops.coded_gradient_batched): a single
-        (N, m/bm)-grid Pallas launch on TPU, limb-packed batched GEMMs on
-        the jnp reference path -- not N per-client dispatches via vmap.
+        batched call: a single (N, m/bm)-grid Pallas launch on TPU,
+        limb-packed batched GEMMs on the jnp reference path -- not N
+        per-client dispatches via vmap.  A matrix objective's (N, dw) flat
+        coded model reshapes to (N, d, C) and the matvec pair becomes a
+        class-batched GEMM pair (kernels/ops.coded_gradient_matrix): one
+        encoding drives all C one-vs-rest columns.
+
+        `coded_x` may carry fewer than N leading rows (the sharded engine
+        passes each shard's local clients).
         """
         from ..kernels import ops as kernel_ops
-        return kernel_ops.coded_gradient_batched(
-            coded_x, coded_w, self.poly_coeffs)                  # (N, d)
+        if not self.out_shape:
+            return kernel_ops.coded_gradient_batched(
+                coded_x, coded_w, self.poly_coeffs)              # (N, d)
+        w_mat = coded_w.reshape(coded_w.shape[0], self.d,
+                                self.obj.n_outputs)
+        return kernel_ops.coded_gradient_matrix(
+            coded_x, w_mat, self.poly_coeffs)                    # (N, d, C)
 
     def decode_and_update(self, key, state: CopmlState, f_values,
                           subset: Sequence[int] | None = None, *,
@@ -275,12 +336,16 @@ class Copml:
         # section Perf, COPML cell, iteration 1).
         per_holder = meshutil.maybe_constrain(
             jnp.swapaxes(f_shares, 0, 1), meshutil.CLIENTS)
-        # (N_holder, N_owner, d); each holder decodes from its R rows.
-        # sum over K commutes with the decode matmul: fold it into ONE
-        # matvec row  (sum_k D[k, :]) @ evals  -- K x less local work
-        evals = per_holder[:, subset_idx, :]                     # (N_h, R, d)
+        # (N_holder, N_owner) + w_shape; each holder decodes from its R
+        # rows.  sum over K commutes with the decode matmul: fold it into
+        # ONE matvec row  (sum_k D[k, :]) @ evals  -- K x less local work.
+        # Trailing model dims flatten into the element axis (no-op for
+        # vector objectives).
+        evals = per_holder[:, subset_idx]                  # (N_h, R)+w_shape
+        evals = evals.reshape(n, evals.shape[1], self.dw)
         xtg_shares = jax.vmap(
-            lambda e: field.matmul(dvec[None], e)[0])(evals)     # (N, d)
+            lambda e: field.matmul(dvec[None], e)[0])(evals)
+        xtg_shares = xtg_shares.reshape((n,) + self.w_shape)
 
         # LOCAL: gradient shares; then secure update with TruncPr
         grad_shares = field.sub(xtg_shares, state.xty_shares)
@@ -310,7 +375,8 @@ class Copml:
             # any decode including one is visibly wrong (ADV_OFFSET); the
             # fault plan keeps them out of subset_idx, and the
             # bit-exactness tests prove the exclusion is real
-            f_values = jnp.where(adv[:, None],
+            adv_b = adv.reshape((adv.shape[0],) + (1,) * len(self.w_shape))
+            f_values = jnp.where(adv_b,
                                  field.add(f_values, jnp.asarray(
                                      ADV_OFFSET, f_values.dtype)), f_values)
         return self.decode_and_update(k2_, state, f_values, subset,
@@ -584,7 +650,8 @@ class Copml:
         if ckey in cache:
             return cache[ckey]
 
-        cfg, n, d = self.cfg, self.cfg.n_clients, self.d
+        cfg, n = self.cfg, self.cfg.n_clients
+        dw, w_shape = self.dw, self.w_shape
         assert cfg.t >= 1, "sharded engine assumes T >= 1 (as all paper cases)"
         ndev = mesh.shape[meshutil.CLIENT_AXIS]
         n_loc = -(-n // ndev)
@@ -614,24 +681,31 @@ class Copml:
                 mix.reshape((pmat_loc.shape[0],) + secret.shape), secret[None])
 
         def encode_model(k1_, w_loc, pmat_loc, wall_loc):
-            """Phase-2 per-iteration model encoding, holder-sharded."""
+            """Phase-2 per-iteration model encoding, holder-sharded.
+
+            Randomness shapes mirror the unsharded engine exactly ((T,) +
+            w_shape draws, replicated dealer), so the engines stay
+            bit-exact for every objective; the trailing model dims flatten
+            to dw for the encode matmuls as in Copml.encode_model."""
             kv, ks_ = jax.random.split(k1_)
-            v = field.random_field(kv, (t_, d))
-            v_sh = share_rows(ks_, v, pmat_loc)                  # (n_loc,T,d)
-            blocks = jnp.broadcast_to(w_loc[:, None],
-                                      (w_loc.shape[0], kk, d))
+            v = field.random_field(kv, (t_,) + w_shape)
+            v_sh = share_rows(ks_, v, pmat_loc)            # (n_loc,T)+w_shape
+            n_loc_ = w_loc.shape[0]
+            w_flat = w_loc.reshape(n_loc_, dw)
+            v_flat = v_sh.reshape(n_loc_, t_, dw)
+            blocks = jnp.broadcast_to(w_flat[:, None], (n_loc_, kk, dw))
             enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
                 b[:, None, :], vv[:, None, :], self.alphas, self.betas
-            )[:, 0, :])(blocks, v_sh)                            # (n_loc,N,d)
+            )[:, 0, :])(blocks, v_flat)                          # (n_loc,N,dw)
             # EXCHANGE: reconstruct from ALL holders -- local weighted
             # partial, then a mod-p reduce-scatter hands each shard its own
             # clients' coded model rows
             part = field.matmul(wall_loc[None, :],
-                                enc.reshape(enc.shape[0], -1)).reshape(n, d)
+                                enc.reshape(enc.shape[0], -1)).reshape(n, dw)
             if n_pad > n:
                 part = jnp.concatenate(
-                    [part, jnp.zeros((n_pad - n, d), jnp.int32)], axis=0)
-            return meshutil.psum_scatter_mod(part, axis, ndev)   # (n_loc, d)
+                    [part, jnp.zeros((n_pad - n, dw), jnp.int32)], axis=0)
+            return meshutil.psum_scatter_mod(part, axis, ndev)   # (n_loc, dw)
 
         def trunc(kt, a_loc, pmat_loc):
             """TruncPr (truncation.trunc_pr_core) with shard-local share
@@ -655,24 +729,27 @@ class Copml:
             kf, kt = jax.random.split(k2_)
             # EXCHANGE: share_batch.  The sharing-polynomial draw spans ALL
             # owners (replicated dealer randomness, matching the global
-            # (T, N, d) draw bit-for-bit); each shard keeps its own owners'
-            # columns and deals shares to every holder.
-            coeffs = field.random_field(kf, (t_, n, d))
+            # (T, N) + w_shape draw bit-for-bit); each shard keeps its own
+            # owners' columns and deals shares to every holder.  Trailing
+            # model dims flatten to dw for the exchange/decode matmuls.
+            coeffs = field.random_field(kf, (t_, n) + w_shape)
+            coeffs = coeffs.reshape(t_, n, dw)
             if n_pad > n:
                 coeffs = jnp.concatenate(
-                    [coeffs, jnp.zeros((t_, n_pad - n, d), jnp.int32)],
+                    [coeffs, jnp.zeros((t_, n_pad - n, dw), jnp.int32)],
                     axis=1)
             cl = jax.lax.dynamic_slice_in_dim(
-                coeffs, shard_ix * n_loc, n_loc, axis=1)         # (T,n_loc,d)
+                coeffs, shard_ix * n_loc, n_loc, axis=1)        # (T,n_loc,dw)
             mix = field.matmul(pmat_all, cl.reshape(t_, -1))
-            mine = field.add(mix.reshape(n_pad, n_loc, d),
-                             f_loc[None])          # (N_holder, n_loc_own, d)
+            f_flat = f_loc.reshape(n_loc, dw)
+            mine = field.add(mix.reshape(n_pad, n_loc, dw),
+                             f_flat[None])        # (N_holder, n_loc_own, dw)
             per_holder = meshutil.all_to_all_clients(mine, axis)
-            # (n_loc_holder, N_owner, d): decode LOCALLY per holder
-            evals = per_holder[:, sub_t, :]                      # (n_loc,R,d)
+            # (n_loc_holder, N_owner, dw): decode LOCALLY per holder
+            evals = per_holder[:, sub_t, :]                     # (n_loc,R,dw)
             xtg = jax.vmap(
                 lambda e: field.matmul(dv_t[None], e)[0])(evals)
-            grad = field.sub(xtg, xty_loc)
+            grad = field.sub(xtg.reshape((n_loc,) + w_shape), xty_loc)
             scaled = field.mul_scalar(grad, self.q_eta)
             delta = trunc(kt, scaled, pmat_loc)
             return field.sub(w_loc, delta)
@@ -696,7 +773,8 @@ class Copml:
                     sub_t, dv_t, adv_t = fx
                     adv_loc = jax.lax.dynamic_slice_in_dim(
                         adv_t, shard_ix * n_loc, n_loc)
-                    f_loc = jnp.where(adv_loc[:, None],
+                    adv_b = adv_loc.reshape((n_loc,) + (1,) * len(w_shape))
+                    f_loc = jnp.where(adv_b,
                                       field.add(f_loc, jnp.asarray(
                                           ADV_OFFSET, f_loc.dtype)), f_loc)
                 elif fault_kind == "plan":

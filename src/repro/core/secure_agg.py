@@ -157,27 +157,42 @@ def secure_aggregate(key, grads_per_client, cfg: SecureAggConfig,
 # of the repro.api registry.
 
 
-def _padded_clients(client_xs, client_ys):
-    """Stack ragged per-client rows into (N, mmax, d) + a row mask."""
+def _padded_clients(client_xs, client_ys, objective=None):
+    """Stack ragged per-client rows into (N, mmax, d) + a row mask.
+
+    `objective` (core/objectives) owns the target embedding: targets are
+    (N, mmax) + out_shape (binary/regression pass through, multi-class
+    one-hots integer labels)."""
     n = len(client_xs)
     sizes = [int(np.asarray(x).shape[0]) for x in client_xs]
     mmax, d = max(sizes), int(np.asarray(client_xs[0]).shape[1])
+    out_shape = () if objective is None else objective.out_shape
     xs = np.zeros((n, mmax, d), np.float32)
-    ys = np.zeros((n, mmax), np.float32)
+    ys = np.zeros((n, mmax) + out_shape, np.float32)
     mask = np.zeros((n, mmax), np.float32)
     for j, (x, y) in enumerate(zip(client_xs, client_ys)):
         xs[j, : sizes[j]] = np.asarray(x, np.float32)
-        ys[j, : sizes[j]] = np.asarray(y, np.float32)
+        yj = np.asarray(y, np.float32) if objective is None else \
+            objective.prepare_targets(np.asarray(y))
+        ys[j, : sizes[j]] = yj
         mask[j, : sizes[j]] = 1.0
     return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
 
 
-def _client_mean_grads(xs, ys, mask, w):
-    """(N, d) per-client MEAN logistic gradients over the padded rows."""
-    z = jnp.einsum("nmd,d->nm", xs, w)
-    err = (jax.nn.sigmoid(z) - ys) * mask
-    g = jnp.einsum("nmd,nm->nd", xs, err)
-    return g / jnp.sum(mask, axis=1, keepdims=True)
+def _client_mean_grads(xs, ys, mask, w, objective=None):
+    """Per-client MEAN gradients over the padded rows: (N, d) for a (d,)
+    vector model, (N, d, C) for a (d, C) matrix model (columnwise
+    one-vs-rest).  Default objective = binary logistic (sigmoid)."""
+    act = jax.nn.sigmoid if objective is None else objective.act_jnp
+    if w.ndim == 1:
+        z = jnp.einsum("nmd,d->nm", xs, w)
+        err = (act(z) - ys) * mask
+        g = jnp.einsum("nmd,nm->nd", xs, err)
+        return g / jnp.sum(mask, axis=1, keepdims=True)
+    z = jnp.einsum("nmd,dc->nmc", xs, w)
+    err = (act(z) - ys) * mask[..., None]
+    g = jnp.einsum("nmd,nmc->ndc", xs, err)
+    return g / jnp.sum(mask, axis=1)[:, None, None]
 
 
 def _secure_mean_step(key, g, cfg: SecureAggConfig, subset, sel=None):
@@ -194,30 +209,36 @@ def _secure_mean_step(key, g, cfg: SecureAggConfig, subset, sel=None):
 def secure_logreg(key, client_xs, client_ys, cfg: SecureAggConfig,
                   eta: float, iters: int,
                   subset: Sequence[int] | None = None, callback=None,
-                  step_subsets=None):
+                  step_subsets=None, objective=None):
     """Eager engine: Python loop, one secure_aggregate round per GD step.
 
     Each step j's local gradient is the client's mean gradient, so the
     decoded mean-of-means equals the full-batch gradient (up to split
     raggedness).  `step_subsets` (a fault plan's per-step T+1 holder
     choices) overrides `subset` with a different reconstruction subset
-    every round.  Returns the final float model (d,)."""
+    every round.  `objective` (default binary logistic) picks the gradient
+    and model shape: a matrix objective's (d, C) gradient is flattened for
+    the aggregation round and reshaped back -- the exchange is
+    shape-oblivious.  Returns the final float model, (d,) or (d, C)."""
     cfg.validate()
-    xs, ys, mask = _padded_clients(client_xs, client_ys)
+    xs, ys, mask = _padded_clients(client_xs, client_ys, objective)
     sel_arrays = None if step_subsets is None else \
         selection_arrays(cfg, step_subsets)
-    w = jnp.zeros((xs.shape[2],), jnp.float32)
+    w_shape = (xs.shape[2],) if objective is None else \
+        objective.w_shape(xs.shape[2])
+    w = jnp.zeros(w_shape, jnp.float32)
     for t in range(iters):
-        g = _client_mean_grads(xs, ys, mask, w)
+        g = _client_mean_grads(xs, ys, mask, w, objective)
+        g_flat = g.reshape(cfg.n_clients, -1)
         if sel_arrays is not None:
             mean = _secure_mean_step(
-                jax.random.fold_in(key, t), g, cfg, None,
+                jax.random.fold_in(key, t), g_flat, cfg, None,
                 (sel_arrays[0][t], sel_arrays[1][t]))
         else:
-            grads = [{"g": g[j]} for j in range(cfg.n_clients)]
+            grads = [{"g": g_flat[j]} for j in range(cfg.n_clients)]
             mean = secure_aggregate(jax.random.fold_in(key, t), grads, cfg,
                                     subset)["g"]
-        w = w - eta * mean.astype(jnp.float32)
+        w = w - eta * mean.reshape(w_shape).astype(jnp.float32)
         if callback is not None:
             callback(t, np.asarray(w))
     return np.asarray(w)
@@ -226,7 +247,8 @@ def secure_logreg(key, client_xs, client_ys, cfg: SecureAggConfig,
 def secure_logreg_scan(key, client_xs, client_ys, cfg: SecureAggConfig,
                        eta: float, iters: int,
                        subset: Sequence[int] | None = None,
-                       history: bool = True, step_subsets=None):
+                       history: bool = True, step_subsets=None,
+                       objective=None):
     """jit engine: the whole loop as one compiled lax.scan.
 
     Same per-step fold_in key schedule and the same share/decode field ops
@@ -234,28 +256,34 @@ def secure_logreg_scan(key, client_xs, client_ys, cfg: SecureAggConfig,
     float gradient einsum may differ in summation order).  A fault plan's
     `step_subsets` ride through the scan as stacked (iters, T+1)
     index/weight arrays -- the churned run stays one dispatch.  Returns
-    (w, history (iters, d) or None)."""
+    (w, history) with w the objective's model shape and history
+    (iters,) + that shape, or None."""
     cfg.validate()
-    xs, ys, mask = _padded_clients(client_xs, client_ys)
+    xs, ys, mask = _padded_clients(client_xs, client_ys, objective)
     subset = None if subset is None else tuple(subset)
     sel = None if step_subsets is None else \
         selection_arrays(cfg, step_subsets)
     w, hist = _secure_logreg_jit(key, xs, ys, mask, cfg, float(eta),
-                                 int(iters), subset, bool(history), sel)
+                                 int(iters), subset, bool(history), sel,
+                                 objective)
     return np.asarray(w), (None if hist is None else np.asarray(hist))
 
 
 @partial(jax.jit, static_argnames=("cfg", "eta", "iters", "subset",
-                                   "history"))
+                                   "history", "objective"))
 def _secure_logreg_jit(key, xs, ys, mask, cfg, eta, iters, subset, history,
-                       sel=None):
+                       sel=None, objective=None):
+    w_shape = (xs.shape[2],) if objective is None else \
+        objective.w_shape(xs.shape[2])
+
     def body(w, xs_t):
         t, sel_t = xs_t
-        g = _client_mean_grads(xs, ys, mask, w)
-        mean = _secure_mean_step(jax.random.fold_in(key, t), g, cfg, subset,
+        g = _client_mean_grads(xs, ys, mask, w, objective)
+        mean = _secure_mean_step(jax.random.fold_in(key, t),
+                                 g.reshape(cfg.n_clients, -1), cfg, subset,
                                  sel_t)
-        w = w - eta * mean.astype(jnp.float32)
+        w = w - eta * mean.reshape(w_shape).astype(jnp.float32)
         return w, (w if history else None)
 
-    return jax.lax.scan(body, jnp.zeros((xs.shape[2],), jnp.float32),
+    return jax.lax.scan(body, jnp.zeros(w_shape, jnp.float32),
                         (jnp.arange(iters), sel))

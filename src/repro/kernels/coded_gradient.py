@@ -16,6 +16,12 @@ X~_i and coded model w~_i), so a (N, m/bm) grid runs the whole round as ONE
 pallas_call -- one dispatch, one pipeline, w~_i resident in VMEM across a
 client's row blocks -- instead of N single-client launches under an outer
 vmap.
+
+`coded_gradient_matrix` is the class-batched form for MATRIX models
+(multi-class one-vs-rest): w~_i is (d, C), so both passes are real GEMMs
+(C columns in the MXU free dimension) on the same (N, m/bm) grid -- one
+launch computing X~^T ghat(X~ W) for every client and every class, instead
+of C matvec dispatches per client.
 """
 
 from __future__ import annotations
@@ -130,6 +136,74 @@ def coded_gradient(x, w, coeffs, *, bm: int = DEFAULT_BM,
         ],
         out_specs=pl.BlockSpec((d,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((d,), jnp.int32),
+        interpret=interpret,
+    )(x, w, coeffs)
+
+
+def _fused_block_matrix(x, w, c_ref, o_ref, *, degree: int, dc: int):
+    """One (bm, d) row block of one client's coded slice against a (d, C)
+    matrix model: the class-batched twin of _fused_block.  Both passes are
+    (.., dc) x (dc, C)-ish GEMMs with C in the free dimension; the
+    contraction widths (dc for pass 1, bm for pass 2) keep the f32 limb
+    products exact as in the vector kernel."""
+    bm, d = x.shape
+    c = w.shape[1]
+
+    # pass 1: Z = (X_blk @ W) mod p, chunked over d for f32 exactness
+    z = jnp.zeros((bm, c), jnp.int32)
+    for s in range(0, d, dc):
+        z = field.add(z, _limb_dot_mod(x[:, s:s + dc], w[s:s + dc, :], 1, 0))
+
+    # ghat(Z): unrolled Horner (VPU), elementwise over the (bm, C) block
+    g = jnp.broadcast_to(c_ref[degree], z.shape)
+    for t in range(degree - 1, -1, -1):
+        g = field.add(field.mul(g, z), jnp.broadcast_to(c_ref[t], z.shape))
+
+    # pass 2: acc += X_blk^T G  (contraction over bm <= 1024)
+    for s in range(0, d, dc):
+        upd = _limb_dot_mod(x[:, s:s + dc], g, 0, 0)          # (dc, C)
+        o_ref[0, s:s + dc, :] = field.add(o_ref[0, s:s + dc, :], upd)
+
+
+def _kernel_matrix(x_ref, w_ref, c_ref, o_ref, *, degree: int, dc: int):
+    i = pl.program_id(1)                # row-block index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _fused_block_matrix(x_ref[0], w_ref[0], c_ref, o_ref,
+                        degree=degree, dc=dc)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "dc", "interpret"))
+def coded_gradient_matrix(x, w, coeffs, *, bm: int = DEFAULT_BM,
+                          dc: int = DEFAULT_DC, interpret: bool = True):
+    """f[n] = (x[n]^T ghat(x[n] @ w[n])) mod p for (N, d, C) matrix models.
+
+    x: (N, m, d) int32 field; w: (N, d, C); coeffs: (r+1,) shared across
+    clients and classes.  m % bm == 0, d % dc == 0 (ops.py pads); the class
+    width C rides in the GEMM free dimension (C <= 1024 to keep the output
+    block VMEM-resident).  Grid (N, m/bm), row blocks innermost, exactly as
+    the vector kernel.
+    """
+    nb, m, d = x.shape
+    assert w.shape[:2] == (nb, d), (x.shape, w.shape)
+    c = w.shape[2]
+    assert m % bm == 0 and d % dc == 0, (x.shape, bm, dc)
+    assert bm <= 1024 and dc <= 1024 and c <= 1024
+    degree = coeffs.shape[0] - 1
+    return pl.pallas_call(
+        functools.partial(_kernel_matrix, degree=degree, dc=dc),
+        grid=(nb, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, d, c), lambda n, i: (n, 0, 0)),
+            pl.BlockSpec((coeffs.shape[0],), lambda n, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d, c), lambda n, i: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, d, c), jnp.int32),
         interpret=interpret,
     )(x, w, coeffs)
 

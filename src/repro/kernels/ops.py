@@ -119,3 +119,24 @@ def coded_gradient_batched(x, w, coeffs, *, bm=None, dc=None,
     out = _cg.coded_gradient_batched(x, w, coeffs, bm=bm, dc=dc,
                                      interpret=INTERPRET)
     return out[:, :d0] if dpad else out
+
+
+def coded_gradient_matrix(x, w, coeffs, *, bm=None, dc=None,
+                          force_pallas: bool = False):
+    """f[n] = x[n]^T ghat(x[n] @ w[n]) for MATRIX models w: (N, d, C).
+
+    The class-batched Phase-3 round of a multi-class objective: one
+    (N, m/bm)-grid launch computes every client's and every class's coded
+    gradient as a batched GEMM pair, instead of C matvec dispatches.
+    """
+    if not (USE_PALLAS or force_pallas):
+        return ref.coded_gradient_matrix(x, w, coeffs)
+    d0 = x.shape[2]
+    bm = bm or min(_cg.DEFAULT_BM, max(8, x.shape[1]))
+    dc = dc or min(_cg.DEFAULT_DC, max(8, d0))
+    x, _ = _pad_to(x, 1, bm)
+    x, dpad = _pad_to(x, 2, dc)
+    w, _ = _pad_to(w, 1, dc)
+    out = _cg.coded_gradient_matrix(x, w, coeffs, bm=bm, dc=dc,
+                                    interpret=INTERPRET)
+    return out[:, :d0] if dpad else out

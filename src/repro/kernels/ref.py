@@ -52,3 +52,16 @@ def coded_gradient_batched(x, w, coeffs):
     z = field.matvec_batched(x, w)                       # (N, m)
     g = field.evaluate_poly_dyn(coeffs, z)
     return field.matvec_batched(jnp.swapaxes(x, 1, 2), g)  # (N, d)
+
+
+def coded_gradient_matrix(x, w, coeffs):
+    """f[n] = x[n]^T ghat(x[n] @ w[n]) for a MATRIX model w: (N, d, C).
+
+    The class-batched hot loop: the matvec pair of the vector path becomes
+    a batched GEMM pair with C columns in the free dimension (far better
+    arithmetic intensity than C matvec dispatches over the same x), and
+    ghat is evaluated elementwise over the whole (N, m, C) logit block.
+    """
+    z = jax.vmap(field.matmul)(x, w)                        # (N, m, C)
+    g = field.evaluate_poly_dyn(coeffs, z)
+    return jax.vmap(field.matmul)(jnp.swapaxes(x, 1, 2), g)  # (N, d, C)

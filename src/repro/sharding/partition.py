@@ -203,8 +203,8 @@ def copml_state_structs(proto, mesh: Mesh):
     cl = NamedSharding(mesh, P(tuple(mesh.axis_names)))
     sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32, sharding=cl)
     return CopmlState(
-        w_shares=sds((n_pad, d)),
+        w_shares=sds((n_pad,) + proto.w_shape),
         coded_x=sds((n_pad, mk, d)),
-        xty_shares=sds((n_pad, d)),
+        xty_shares=sds((n_pad,) + proto.w_shape),
         step=jax.ShapeDtypeStruct((), jnp.int32, sharding=replicated(mesh)),
     )

@@ -61,6 +61,21 @@ def floats(min_value=None, max_value=None, allow_nan=True,
     return _Strategy(gen)
 
 
+def sampled_from(elements):
+    """Cycle through the given elements deterministically (all of them
+    first, then seeded repeats) -- mirrors hypothesis.strategies
+    .sampled_from for the shim's example counts."""
+    elements = list(elements)
+
+    def gen(n, rng):
+        out = list(elements)[:n]
+        while len(out) < n:
+            out.append(rng.choice(elements))
+        return out
+
+    return _Strategy(gen)
+
+
 def settings(max_examples=None, deadline=None, **_kw):
     """Records max_examples on the test; the fallback caps it anyway."""
 
@@ -104,6 +119,7 @@ def install():
     strat = types.ModuleType("hypothesis.strategies")
     strat.integers = integers
     strat.floats = floats
+    strat.sampled_from = sampled_from
     mod.strategies = strat
     mod.__is_repro_compat_shim__ = True
     sys.modules["hypothesis"] = mod

@@ -31,10 +31,16 @@ from repro.data import pipeline
 assert len(jax.devices()) == 8, jax.devices()
 
 
-def parity(tag, n, k, t, ndev, subset=None, history=False, iters=3):
-    x, y = pipeline.classification_dataset(m=78, d=6, seed=3, margin=2.0)
+def parity(tag, n, k, t, ndev, subset=None, history=False, iters=3,
+           objective=None):
+    if objective is not None and objective.dataset_kind == "multiclass":
+        x, y = pipeline.multiclass_dataset(m=78, d=6,
+                                           n_classes=objective.n_outputs,
+                                           seed=3)
+    else:
+        x, y = pipeline.classification_dataset(m=78, d=6, seed=3, margin=2.0)
     cfg = CopmlConfig(n_clients=n, k=k, t=t, eta=1.0)
-    proto = Copml(cfg, x.shape[0], x.shape[1])
+    proto = Copml(cfg, x.shape[0], x.shape[1], objective=objective)
     cx, cy = pipeline.split_clients(x, y, n)
     key = jax.random.PRNGKey(5)
     mesh = meshutil.client_mesh(ndev)
@@ -67,6 +73,12 @@ parity("case2_n16_dev8", 16, k2, t2, 8)
 # straggler subset: decode from the LAST R of N clients
 parity("subset_n13_dev4", 13, 3, 1, 4, subset=tuple(range(3, 13)))
 
+# multi-class (d, C) matrix model over REAL collectives: the class-batched
+# encode/exchange/decode path is bit-exact vs the single-device jit engine
+from repro.core import objectives
+parity("ovr3_n13_dev4_history", 13, 3, 1, 4, history=True,
+       objective=objectives.multiclass_logistic(3))
+
 # FaultPlan replayed over REAL collectives: per-step churn threaded through
 # the shard_map scan, bit-exact vs the single-device jit engine
 from repro import api
@@ -84,6 +96,24 @@ np.testing.assert_array_equal(np.asarray(res_s.history),
                               np.asarray(res_j.history))
 np.testing.assert_array_equal(res_s.availability, plan.available)
 print("PARITY faultplan_n13_dev4", flush=True)
+
+# the same churn schedule on the MULTI-CLASS path: sharded == jit == the
+# fault-free run (decode invariance holds columnwise on the matrix model)
+wl_mc = api.Workload(name="dist_faults_ovr3", m=78, d=6, seed=3,
+                     cfg=CopmlConfig(n_clients=13, k=3, t=1, eta=1.0),
+                     iters=3, objective=objectives.multiclass_logistic(3))
+res_ms = api.fit(wl_mc, "copml",
+                 api.EngineSpec("sharded", mesh=meshutil.client_mesh(4)),
+                 key=5, iters=3, faults=plan, history=True)
+res_mj = api.fit(wl_mc, "copml", "jit", key=5, iters=3, faults=plan,
+                 history=True)
+res_m0 = api.fit(wl_mc, "copml", "jit", key=5, iters=3, history=True)
+np.testing.assert_array_equal(res_ms.weights, res_mj.weights)
+np.testing.assert_array_equal(np.asarray(res_ms.history),
+                              np.asarray(res_mj.history))
+np.testing.assert_array_equal(res_mj.weights, res_m0.weights)
+assert res_mj.weights.shape == (6, 3)
+print("PARITY faultplan_ovr3_n13_dev4", flush=True)
 
 # dryrun_cell smoke: compile one real sharded iteration, check collectives
 from repro.launch import copml_dist
@@ -112,7 +142,9 @@ def test_train_sharded_bit_exact_subprocess():
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
     for marker in ("PARITY case1_n13_dev4_history", "PARITY case1_n13_dev8",
                    "PARITY case2_n16_dev8", "PARITY subset_n13_dev4",
-                   "PARITY faultplan_n13_dev4", "DRYRUN OK", "ALL OK"):
+                   "PARITY ovr3_n13_dev4_history",
+                   "PARITY faultplan_n13_dev4",
+                   "PARITY faultplan_ovr3_n13_dev4", "DRYRUN OK", "ALL OK"):
         assert marker in out.stdout, (marker, out.stdout[-2000:])
 
 

@@ -1,0 +1,207 @@
+"""SecureObjective layer: registry, target embedding, and the core
+property -- the kernel-path field gradient equals an independent
+integer-oracle evaluation of the quantized reference gradient, for RANDOM
+objectives and shapes (hypothesis / deterministic shim)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.core import objectives
+from repro.core.protocol import CopmlConfig
+from repro.kernels import ops, ref
+
+MAX_SEED = 2 ** 31 - 1
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_registry_and_shapes():
+    assert set(objectives.names()) >= {"logistic", "linreg", "ovr10"}
+    obj = objectives.get("ovr10")
+    assert obj.n_outputs == 10 and obj.out_shape == (10,)
+    assert obj.w_shape(24) == (24, 10)
+    assert objectives.BINARY_LOGISTIC.w_shape(12) == (12,)
+    assert objectives.LINREG.out_shape == ()
+    with pytest.raises(KeyError, match="unknown objective"):
+        objectives.get("softmax")
+    # ad-hoc class counts need not be registered
+    assert objectives.multiclass_logistic(3).name == "ovr3"
+    with pytest.raises(ValueError, match="n_classes >= 2"):
+        objectives.multiclass_logistic(1)
+    # instances are hashable + value-equal (Workload caching keys on them)
+    assert objectives.multiclass_logistic(3) == objectives.multiclass_logistic(3)
+    assert hash(objectives.BinaryLogistic()) == hash(objectives.BINARY_LOGISTIC)
+
+
+def test_linreg_requires_degree_one():
+    cfg = CopmlConfig(n_clients=13, k=2, t=1, r=2)
+    with pytest.raises(ValueError, match="degree 1"):
+        objectives.LINREG.validate_cfg(cfg)
+    cfg1 = CopmlConfig(n_clients=13, k=4, t=1, r=1)
+    coeffs = objectives.LINREG.field_coeffs(cfg1)
+    # ghat(z) = z quantizes EXACTLY: c0 = 0, c1 = 2^cb
+    np.testing.assert_array_equal(coeffs, [0, 1 << cfg1.cb])
+
+
+def test_binary_field_coeffs_match_preobjective_quantization():
+    """The logistic objective reproduces sigmoid_approx.quantized_coeffs
+    byte for byte -- the guarantee behind the seed goldens."""
+    from repro.core import sigmoid_approx
+    cfg = CopmlConfig(n_clients=13, k=4, t=1)
+    scales = [cfg.lg - i * cfg.lz for i in range(cfg.r + 1)]
+    expect = sigmoid_approx.quantized_coeffs(cfg.r, cfg.lx, scales,
+                                             cfg.sigmoid_bound)
+    np.testing.assert_array_equal(
+        objectives.BINARY_LOGISTIC.field_coeffs(cfg), expect)
+
+
+def test_prepare_targets():
+    ovr = objectives.multiclass_logistic(4)
+    one_hot = ovr.prepare_targets(np.array([0, 3, 1]))
+    np.testing.assert_array_equal(
+        one_hot, [[1, 0, 0, 0], [0, 0, 0, 1], [0, 1, 0, 0]])
+    assert one_hot.dtype == np.float32
+    with pytest.raises(ValueError, match="class labels"):
+        ovr.prepare_targets(np.array([0, 4]))
+    with pytest.raises(ValueError, match="class labels"):
+        ovr.prepare_targets(np.array([[0, 1]]))
+    y = np.array([0.0, 1.0, 1.0], np.float32)
+    np.testing.assert_array_equal(
+        objectives.BINARY_LOGISTIC.prepare_targets(y), y)
+
+
+def test_scores():
+    # multiclass: argmax accuracy + per-class recall (NaN when absent)
+    ovr = objectives.multiclass_logistic(3)
+    x = np.eye(3)
+    w = np.eye(3) * 5.0                   # predicts class i for e_i
+    y = np.array([0, 1, 0])               # row 2 (e_2) mispredicted as 2
+    assert ovr.score(w, x, y) == pytest.approx(2 / 3)
+    pca = ovr.per_class_accuracy(w, x, y)
+    assert pca[0] == pytest.approx(0.5) and pca[1] == 1.0
+    assert np.isnan(pca[2])
+    # linreg: R^2 = 1 for a perfect fit, < 1 otherwise
+    rng = np.random.default_rng(0)
+    xr = rng.normal(size=(20, 3))
+    wr = rng.normal(size=3)
+    assert objectives.LINREG.score(wr, xr, xr @ wr) == pytest.approx(1.0)
+    assert objectives.LINREG.score(wr * 0, xr, xr @ wr) <= 0.0 + 1e-9
+
+
+# ----------------------------------------- the gradient-equality property
+
+
+def _int_oracle_gradient(xq, wq, coeffs):
+    """Independent numpy-uint64 evaluation of X^T ghat(X W) mod p (the
+    quantized reference gradient): field.np_matmul + Horner, no jnp."""
+    z = F.np_matmul(np.asarray(xq), np.asarray(wq))           # (m, C')
+    g = np.full_like(z, int(coeffs[-1]))
+    for ci in range(len(coeffs) - 2, -1, -1):
+        g = (F.np_mul(g, z) + int(coeffs[ci])) % F.P
+    return F.np_matmul(np.asarray(xq).T, g)                   # (d, C')
+
+
+def _quantize_np(x, scale):
+    q = np.round(np.asarray(x, np.float64) * (1 << scale)).astype(np.int64)
+    return (q % F.P).astype(np.int32)
+
+
+@given(st.integers(0, MAX_SEED),
+       st.sampled_from(["logistic", "logistic_r2", "linreg", "ovr2", "ovr3"]))
+@settings(max_examples=8, deadline=None)
+def test_field_gradient_equals_quantized_reference(seed, obj_name):
+    """The kernels-path coded gradient (what Phase 3 runs) is EXACTLY the
+    integer-oracle evaluation of the objective's quantized gradient
+    polynomial, for random objectives, degrees, and shapes."""
+    rng = np.random.default_rng(seed)
+    r = 2 if obj_name == "logistic_r2" else 1
+    obj = {"logistic": objectives.BINARY_LOGISTIC,
+           "logistic_r2": objectives.BINARY_LOGISTIC,
+           "linreg": objectives.LINREG,
+           "ovr2": objectives.multiclass_logistic(2),
+           "ovr3": objectives.multiclass_logistic(3)}[obj_name]
+    n_req = (2 * r + 1) * 2 + 1
+    cfg = CopmlConfig(n_clients=max(7, n_req), k=2, t=1, r=r)
+    obj.validate_cfg(cfg)
+    coeffs = obj.field_coeffs(cfg)
+
+    m = int(rng.integers(4, 12))
+    d = int(rng.integers(2, 6))
+    nb = int(rng.integers(1, 4))          # client batch
+    xq = _quantize_np(rng.uniform(-1, 1, size=(nb, m, d)), cfg.lx)
+    wq = _quantize_np(rng.uniform(-2, 2, size=(nb,) + obj.w_shape(d)),
+                      cfg.lw)
+
+    if obj.out_shape:
+        got = np.asarray(ops.coded_gradient_matrix(
+            jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(coeffs)))
+        oracle = np.stack([_int_oracle_gradient(xq[i], wq[i], coeffs)
+                           for i in range(nb)])
+    else:
+        got = np.asarray(ops.coded_gradient_batched(
+            jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(coeffs)))
+        oracle = np.stack([
+            _int_oracle_gradient(xq[i], wq[i][:, None], coeffs)[:, 0]
+            for i in range(nb)])
+    np.testing.assert_array_equal(got, oracle.astype(np.int64))
+
+
+def test_matrix_gradient_columns_equal_vector_gradients():
+    """Class batching is pure batching: column c of the matrix coded
+    gradient equals the vector coded gradient of w[:, c]."""
+    rng = np.random.default_rng(3)
+    cfg = CopmlConfig(n_clients=13, k=4, t=1)
+    obj = objectives.multiclass_logistic(4)
+    coeffs = obj.field_coeffs(cfg)
+    xq = jnp.asarray(_quantize_np(rng.uniform(-1, 1, (2, 9, 5)), cfg.lx))
+    wq = jnp.asarray(_quantize_np(rng.uniform(-2, 2, (2, 5, 4)), cfg.lw))
+    full = np.asarray(ops.coded_gradient_matrix(xq, wq, jnp.asarray(coeffs)))
+    for c in range(4):
+        col = np.asarray(ops.coded_gradient_batched(
+            xq, wq[:, :, c], jnp.asarray(coeffs)))
+        np.testing.assert_array_equal(full[:, :, c], col)
+
+
+def test_matrix_pallas_kernel_matches_reference():
+    """The class-batched Pallas kernel (interpret mode on CPU) agrees with
+    the jnp reference elementwise mod p."""
+    rng = np.random.default_rng(5)
+    xq = jnp.asarray(rng.integers(0, F.P, size=(2, 16, 8)).astype(np.int32))
+    wq = jnp.asarray(rng.integers(0, F.P, size=(2, 8, 3)).astype(np.int32))
+    coeffs = jnp.asarray(rng.integers(0, F.P, size=(2,)).astype(np.int32))
+    want = np.asarray(ref.coded_gradient_matrix(xq, wq, coeffs))
+    got = np.asarray(ops.coded_gradient_matrix(xq, wq, coeffs,
+                                               bm=8, dc=8,
+                                               force_pallas=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_dequantized_gradient_tracks_float_reference():
+    """Dequantizing the field gradient at scale lx+lg recovers the float
+    polynomial gradient up to coefficient rounding (|err| bounded by the
+    ghat coefficient grid x the z range x m rows)."""
+    rng = np.random.default_rng(11)
+    cfg = CopmlConfig(n_clients=13, k=4, t=1)
+    obj = objectives.BINARY_LOGISTIC
+    m, d = 16, 4
+    x = rng.uniform(-1, 1, size=(m, d))
+    w = np.round(rng.uniform(-2, 2, size=d) * (1 << cfg.lw)) / (1 << cfg.lw)
+    xg = np.round(x * (1 << cfg.lx)) / (1 << cfg.lx)   # the grids the
+    #                                                    field path sees
+    xq = _quantize_np(xg, cfg.lx)
+    wq = _quantize_np(w, cfg.lw)
+    f = _int_oracle_gradient(xq, wq[:, None], obj.field_coeffs(cfg))[:, 0]
+    signed = np.where(f > F.P // 2, f - F.P, f)
+    got = signed / float(1 << (cfg.lx + cfg.lg))
+    cs = obj.float_coeffs(cfg.r, cfg.sigmoid_bound)
+    ghat = np.zeros(m)
+    for c in reversed(cs):
+        ghat = ghat * (xg @ w) + c
+    want = xg.T @ ghat
+    # error budget: c1 rounds on the 2^-cb grid, |z| <= d*2 per row
+    tol = m * (0.5 ** cfg.cb) * (d * 2) + m * 2.0 ** -(cfg.lg + 1) + 1e-9
+    np.testing.assert_allclose(got, want, atol=tol)

@@ -171,6 +171,34 @@ def test_case_parameterizations():
         assert t2 >= max(1, (n - 3) // 6)
 
 
+def test_case2_params_general_r():
+    """case2_params no longer silently applies its r=1 formula for r>1:
+    the general form honors (2r+1)(K+T-1)+1 <= N for every r, reduces
+    exactly to the published r=1 formula, and raises (instead of
+    returning an invalid split) when N is too small."""
+    # r=1: bit-identical to the published formula (paper-table shapes
+    # like cifar10_case2's (10, 7) at N=50 must not move)
+    for n in range(7, 60):
+        t_pub = max(1, (n - 3) // 6)
+        k_pub = max(1, (n + 2) // 3 - t_pub)
+        assert case2_params(n, 1) == (k_pub, t_pub), n
+    assert case2_params(50, 1) == (10, 7)
+    # general r: the recovery threshold constraint holds and the split
+    # stays roughly equal (T about half the K+T budget)
+    for r in (2, 3, 5):
+        for n in (4 * r + 4, 25, 50, 111):
+            k, t = case2_params(n, r)
+            assert (2 * r + 1) * (k + t - 1) + 1 <= n, (n, r, k, t)
+            assert k >= 1 and t >= 1
+    # too-small N: a named error, not a silently invalid (K, T)
+    with pytest.raises(ValueError, match="no valid"):
+        case2_params(3, 1)
+    with pytest.raises(ValueError, match="no valid"):
+        case2_params(5, 2)            # even K=T=1 needs N >= 2r+2 = 6
+    with pytest.raises(ValueError, match="r must be >= 1"):
+        case2_params(13, 0)
+
+
 def test_sigmoid_poly_quality():
     assert sigmoid_approx.max_abs_error(1) < 0.25
     assert sigmoid_approx.max_abs_error(3) < sigmoid_approx.max_abs_error(1)

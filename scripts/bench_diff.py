@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Diff fresh BENCH_<stage>.json trajectories against committed baselines.
+
+CI generates fresh trajectories for the fast stages on every PR
+(`python -m benchmarks.run --stage engine,multiclass --json .`); the
+committed reference numbers live in benchmarks/baselines/.  This script
+pairs the two by row name and fails (exit 1) when any row's wall time
+regresses by more than --threshold (default 20%).
+
+Rows are matched on their fully-qualified benchmark name
+("kernel_micro/copml_train_jit_20it", ...).  A row present in the
+baseline but missing from the fresh run is a failure too -- silently
+dropping a benchmark is how regressions hide.  New rows (fresh-only) are
+reported but do not fail: they become gated once their baseline is
+committed.
+
+Usage:
+    python scripts/bench_diff.py --fresh-dir . \
+        [--baseline-dir benchmarks/baselines] [--threshold 0.20] \
+        [--stages engine,multiclass]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict:
+    """name -> us_per_call for one BENCH_<stage>.json trajectory."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("failure"):
+        raise SystemExit(f"{path}: recorded failure: {doc['failure']}")
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def diff_stage(stage: str, base_path: str, fresh_path: str,
+               threshold: float) -> list:
+    """Returns a list of failure strings (empty = stage passes)."""
+    base = load_rows(base_path)
+    fresh = load_rows(fresh_path)
+    failures = []
+    print(f"--- {stage}: {len(base)} baseline rows, {len(fresh)} fresh ---")
+    for name, b_us in sorted(base.items()):
+        if name not in fresh:
+            failures.append(f"{stage}: row {name!r} missing from fresh run")
+            print(f"  MISSING  {name}")
+            continue
+        f_us = fresh[name]
+        if b_us <= 0.0:
+            # ratio/derived-only rows carry no wall time; nothing to gate
+            print(f"     n/a   {name}  (derived-only row, ungated)")
+            continue
+        ratio = f_us / b_us
+        verdict = "ok"
+        if ratio > 1.0 + threshold:
+            verdict = f"REGRESSED >{threshold:.0%}"
+            failures.append(
+                f"{stage}: {name} regressed {ratio - 1.0:+.1%} "
+                f"({b_us / 1e3:.2f}ms -> {f_us / 1e3:.2f}ms)")
+        print(f"  {ratio - 1.0:+7.1%}  {name}  "
+              f"({b_us / 1e3:.2f}ms -> {f_us / 1e3:.2f}ms)  {verdict}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"  NEW      {name} ({fresh[name] / 1e3:.2f}ms, ungated)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="directory with committed BENCH_<stage>.json files")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory with freshly generated trajectories")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated wall-time growth (0.20 = +20%%)")
+    ap.add_argument("--stages", default="",
+                    help="comma-separated stage subset (default: every "
+                         "stage with a committed baseline)")
+    args = ap.parse_args(argv)
+
+    pattern = os.path.join(args.baseline_dir, "BENCH_*.json")
+    baselines = sorted(glob.glob(pattern))
+    if not baselines:
+        print(f"bench_diff: no baselines under {args.baseline_dir}",
+              file=sys.stderr)
+        return 1
+    wanted = {s.strip() for s in args.stages.split(",") if s.strip()}
+
+    failures = []
+    compared = 0
+    for base_path in baselines:
+        stage = os.path.basename(base_path)[len("BENCH_"):-len(".json")]
+        if wanted and stage not in wanted:
+            continue
+        fresh_path = os.path.join(args.fresh_dir, f"BENCH_{stage}.json")
+        if not os.path.exists(fresh_path):
+            failures.append(f"{stage}: fresh trajectory {fresh_path} "
+                            "not found")
+            continue
+        failures += diff_stage(stage, base_path, fresh_path, args.threshold)
+        compared += 1
+
+    if wanted and compared < len(wanted):
+        missing = wanted - {os.path.basename(p)[len("BENCH_"):-len(".json")]
+                            for p in baselines}
+        for stage in sorted(missing):
+            failures.append(f"{stage}: no committed baseline "
+                            f"(benchmarks/baselines/BENCH_{stage}.json)")
+
+    if failures:
+        print("\nbench_diff: FAIL")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nbench_diff: OK ({compared} stage(s) within "
+          f"+{args.threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

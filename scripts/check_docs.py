@@ -11,7 +11,9 @@ Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
 4. docs/API.md covers the live repro.api registries: every registered
    protocol, engine, workload, and objective name and every TrainResult
    field must appear there (imports the package, so a stale doc fails the
-   lint).
+   lint);
+5. docs/ANALYSIS.md covers the live seclint rule registry: every rule ID
+   in repro.analysis.RULES must appear in the catalog.
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -133,6 +135,28 @@ def check_api() -> list:
     return problems
 
 
+def check_analysis() -> list:
+    """docs/ANALYSIS.md must document every LIVE seclint rule ID."""
+    path = os.path.join(ROOT, "docs", "ANALYSIS.md")
+    if not os.path.exists(path):
+        return ["missing docs/ANALYSIS.md (the seclint rule catalog)"]
+    with open(path) as f:
+        text = f.read()
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        from repro.analysis import RULES
+    except Exception as e:  # noqa: BLE001 -- an unimportable analyzer IS a finding
+        return [f"repro.analysis failed to import for the docs lint: {e!r}"]
+    problems = []
+    for rule_id in RULES:
+        if f"`{rule_id}`" not in text:
+            problems.append(f"docs/ANALYSIS.md: rule `{rule_id}` is in the "
+                            "live registry but missing from the catalog")
+    return problems
+
+
 def main() -> int:
     doc_text = ""
     for rel in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
@@ -143,7 +167,7 @@ def main() -> int:
         with open(path) as f:
             doc_text += f.read()
     problems = (check_packages(doc_text) + check_links() + check_commands()
-                + check_api())
+                + check_api() + check_analysis())
     for p in problems:
         print(p)
     if not problems:

@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Repo entry point for the seclint static analyzer.
+
+Equivalent to `python -m repro.analysis`; exists so the gate is
+runnable from the repo root without remembering the module path:
+
+    PYTHONPATH=src python scripts/seclint.py src/repro
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""seclint: secrecy-taint + field-arithmetic static analyzer for the MPC hot path.
+
+Run it as `python -m repro.analysis src/repro` (or `scripts/seclint.py`).
+See docs/ANALYSIS.md for the rule catalog, the taint model, and the
+waiver-pragma grammar.
+
+Public API:
+    analyze_paths(paths, ...) -> AnalysisResult (.findings / .active /
+                                 .waived / .unused_waivers)
+    RULES                     -- {rule_id: one-line description}
+"""
+
+from __future__ import annotations
+
+from .engine import analyze_paths
+from .registry import RULES
+from .report import Finding, render_budget, render_json, render_text
+
+__all__ = [
+    "analyze_paths",
+    "Finding",
+    "RULES",
+    "render_text",
+    "render_json",
+    "render_budget",
+]

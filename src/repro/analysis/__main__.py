@@ -1,0 +1,87 @@
+"""CLI: `python -m repro.analysis [paths...]`.
+
+Exit status 0 = clean (every finding waived with a reason); 1 = unwaived
+findings (or, under --strict, ANY findings/waivers).  Also reachable as
+`scripts/seclint.py`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .engine import analyze_paths
+from .registry import RULES
+from .report import render_budget, render_json, render_text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="seclint",
+        description="secrecy-taint + field-arithmetic static analyzer "
+                    "for the COPML MPC hot path")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or trees to analyze (default: src/repro)")
+    ap.add_argument("--package", default="",
+                    help="dotted package context for explicitly-listed "
+                         "files (resolves their relative imports), e.g. "
+                         "--package repro.core")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat every waiver (used or unused) as an error")
+    ap.add_argument("--json", metavar="PATH", default="",
+                    help="write the full findings report as JSON")
+    ap.add_argument("--budget-report", metavar="PATH", default="",
+                    help="write the waiver-budget report to PATH "
+                         "('-' for stdout)")
+    ap.add_argument("--no-scope", action="store_true",
+                    help="ignore the legacy-module scope config and "
+                         "analyze everything")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print waived findings")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid]}")
+        return 0
+
+    paths = args.paths or ["src/repro"]
+    t0 = time.monotonic()
+    res = analyze_paths(paths, package=args.package, strict=args.strict,
+                        apply_scope=not args.no_scope)
+    elapsed = time.monotonic() - t0
+
+    text = render_text(res.findings, show_waived=args.show_waived
+                       or args.strict)
+    if text:
+        print(text)
+
+    if args.json:
+        payload = render_json(res.findings, meta={
+            "files": len(res.files), "seconds": round(elapsed, 3)})
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(payload + "\n")
+
+    budget = render_budget(res.findings, res.waiver_maps)
+    if args.budget_report == "-":
+        print(budget)
+    elif args.budget_report:
+        with open(args.budget_report, "w", encoding="utf-8") as fh:
+            fh.write(budget + "\n")
+
+    active = res.active
+    waived = res.waived
+    print(f"seclint: {len(res.files)} files, {len(active)} finding(s), "
+          f"{len(waived)} waived, {len(res.unused_waivers)} unused "
+          f"waiver(s) [{elapsed:.2f}s]")
+
+    if args.strict:
+        return 1 if (active or waived or res.unused_waivers) else 0
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

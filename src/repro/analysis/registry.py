@@ -1,0 +1,230 @@
+"""Rule catalog and the sources / sinks / propagators registry.
+
+Everything seclint believes about the world outside the file under
+analysis lives here: which calls *create* secrets, which calls are
+*sanctioned declassify sinks*, which calls merely move values around,
+and which calls pull a value onto the host where a secret must never go.
+The tables are keyed by fully-resolved dotted names (`repro.core.shamir
+.share`, `numpy.asarray`); `<prefix>.*` entries act as longest-prefix
+wildcards.
+"""
+
+from __future__ import annotations
+
+# --------------------------------------------------------------------------
+# taint labels
+# --------------------------------------------------------------------------
+
+SHARE = "share"      # Shamir share of a secret
+CODED = "coded"      # LCC-coded slice
+RAND = "rand"        # dealer / offline randomness
+FIELD = "field"      # value lives in the field domain F_p
+REDUCED = "reduced"  # known canonical in [0, p)
+
+SECRET = frozenset({SHARE, CODED, RAND})
+
+#: annotation name -> label set (annotations are the analyzer's ground truth)
+ANNOT_LABELS = {
+    "Share": frozenset({SHARE, FIELD, REDUCED}),
+    "Coded": frozenset({CODED, FIELD, REDUCED}),
+    "SecretRand": frozenset({RAND, FIELD, REDUCED}),
+    "Public": frozenset({FIELD, REDUCED}),
+    "Opened": frozenset(),  # sanctioned declassification: no residual taint
+}
+
+#: the COPML field modulus; any other modulus literal >= SMALL_MOD_FLOOR
+#: appearing as the right side of `%` is a foreign-modulus finding.
+P_VALUE = (1 << 26) - 5
+SMALL_MOD_FLOOR = 1 << 13  # `% 2`, `% block` index math stays exempt
+
+# --------------------------------------------------------------------------
+# rule catalog
+# --------------------------------------------------------------------------
+
+RULES = {
+    "SEC001": "secret-tainted value reaches a host escape "
+              "(np.asarray / int() / .item() / print / logging)",
+    "SEC002": "secret-dependent Python `if`/`while` "
+              "(leak channel + jit-recompile hazard)",
+    "SEC003": "secret-tainted value crosses into an unregistered "
+              "external module without a sanctioned sink",
+    "FLD001": "raw `+`/`-`/`*`/`@`/`%`/`**` on a field-domain array "
+              "outside core/field.py / kernels/ wrappers",
+    "FLD002": "narrowing dtype cast of a field value not dominated "
+              "by a `% field.P` reduction",
+    "FLD003": "float dtype touching a field-domain value",
+    "FLD004": "modulus literal other than field.P",
+    "WVR001": "malformed seclint waiver pragma",
+    "WVR002": "unused seclint waiver pragma (strict mode only)",
+}
+
+# --------------------------------------------------------------------------
+# call effects
+# --------------------------------------------------------------------------
+# kind semantics (u = union of argument label sets):
+#   source     -> labels | (u & SECRET)        creates a secret domain
+#   open       -> (u - {share, rand}) | {field, reduced}   declassify sink
+#   decode     -> (u - {coded}) | {field, reduced}         LCC decode sink
+#   declassify -> {}                            fully sanctioned opening
+#   fieldop    -> {field, reduced} | (u & SECRET)   exact mod-p wrapper
+#   dequant    -> u - {field, reduced}          leaves the field domain
+#   public     -> {field, reduced}              public field-domain constant
+#   plain      -> {}                            no taint
+#   propagate  -> u (dropping `reduced` if any field arg was unreduced)
+#   escape     -> {} ; SEC001 if any argument is secret
+#   replace    -> propagate + keep the dataclass type of arg 0
+
+EFFECTS = {
+    # --- field arithmetic: the wrappers ARE the sanctioned ops ------------
+    "repro.core.field.*": {"kind": "fieldop"},
+    "repro.core.field.random_field": {
+        "kind": "source", "labels": frozenset({RAND, FIELD, REDUCED})},
+    "repro.core.field.host_inv": {"kind": "public"},
+    "repro.core.field.host_lagrange_coeffs": {"kind": "public"},
+
+    # --- Shamir sharing ----------------------------------------------------
+    "repro.core.shamir.share": {
+        "kind": "source", "labels": frozenset({SHARE, FIELD, REDUCED})},
+    "repro.core.shamir.share_batch": {
+        "kind": "source", "labels": frozenset({SHARE, FIELD, REDUCED})},
+    "repro.core.shamir.reshare": {
+        "kind": "source", "labels": frozenset({SHARE, FIELD, REDUCED})},
+    "repro.core.shamir.reconstruct": {"kind": "open"},
+    "repro.core.shamir.reconstruct_dyn": {"kind": "open"},
+    "repro.core.shamir.recon_weights": {"kind": "public"},
+    "repro.core.shamir.step_subset_arrays": {"kind": "public"},
+    "repro.core.shamir.*": {"kind": "public"},
+
+    # --- MPC primitives ----------------------------------------------------
+    "repro.core.mpc.open_shares": {"kind": "open"},
+    "repro.core.mpc.*": {"kind": "fieldop"},
+
+    # --- LCC coding ---------------------------------------------------------
+    "repro.core.lagrange.lcc_encode": {
+        "kind": "source", "labels": frozenset({CODED, FIELD, REDUCED})},
+    "repro.core.lagrange.lcc_decode": {"kind": "decode"},
+    "repro.core.lagrange.encode_matrix": {"kind": "public"},
+    "repro.core.lagrange.decode_matrix": {"kind": "public"},
+    "repro.core.lagrange.*": {"kind": "propagate"},
+
+    # --- quantization -------------------------------------------------------
+    "repro.core.quantize.quantize": {"kind": "fieldop"},
+    "repro.core.quantize.dequantize": {"kind": "dequant"},
+    "repro.core.quantize.signed_value": {"kind": "dequant"},
+    "repro.core.quantize.*": {"kind": "propagate"},
+
+    # --- everything else repro-internal ------------------------------------
+    "repro.core.truncation.*": {"kind": "propagate"},
+    "repro.core.meshutil.*": {"kind": "propagate"},
+    "repro.core.labels.*": {"kind": "plain"},
+    "repro.kernels.*": {"kind": "propagate"},
+    "repro.*": {"kind": "propagate"},
+
+    # --- dataclasses --------------------------------------------------------
+    "dataclasses.replace": {"kind": "replace"},
+    "dataclasses.*": {"kind": "propagate"},
+
+    # --- host escapes -------------------------------------------------------
+    "numpy.asarray": {"kind": "escape"},
+    "numpy.array": {"kind": "escape"},
+    "numpy.save": {"kind": "escape"},
+    "numpy.savez": {"kind": "escape"},
+    "numpy.savetxt": {"kind": "escape"},
+    "numpy.testing.*": {"kind": "escape"},
+    "numpy.*": {"kind": "propagate"},
+    "jax.debug.*": {"kind": "escape"},
+    "jax.*": {"kind": "propagate"},
+    "logging.*": {"kind": "escape"},
+    "warnings.*": {"kind": "escape"},
+    "builtins.print": {"kind": "escape"},
+    "builtins.int": {"kind": "escape"},
+    "builtins.float": {"kind": "escape"},
+    "builtins.bool": {"kind": "escape"},
+
+    # --- misc stdlib that shows up in the hot path --------------------------
+    "functools.*": {"kind": "propagate"},
+    "itertools.*": {"kind": "propagate"},
+    "math.*": {"kind": "plain"},
+    "copy.*": {"kind": "propagate"},
+    "operator.*": {"kind": "propagate"},
+}
+
+#: module roots that never count as a SEC003 boundary (registered above or
+#: known-inert).  Anything else receiving a secret argument is a finding.
+SAFE_ROOTS = frozenset({
+    "repro", "jax", "jaxlib", "numpy", "builtins",
+    "dataclasses", "functools", "itertools", "math", "copy", "operator",
+    "typing", "collections", "abc", "enum", "contextlib",
+    "os", "sys", "time", "argparse", "pathlib", "re", "string",
+})
+
+#: dotted prefixes that are known *modules* (not attributes), derived from
+#: the EFFECTS keys.  Lets `from repro.core import field` resolve even when
+#: repro itself is not part of the indexed tree (fixtures, tmp copies).
+KNOWN_MODULES = frozenset(
+    key.rsplit(".", 1)[0] for key in EFFECTS if not key.endswith("*")
+) | frozenset(
+    key[:-2] for key in EFFECTS if key.endswith(".*")
+) | frozenset({
+    "jax.numpy", "jax.random", "jax.lax", "jax.debug", "numpy.testing",
+    "repro.core", "repro.kernels", "repro.api", "repro.core.protocol",
+    "repro.core.secure_agg", "repro.core.baselines", "repro.core.objectives",
+})
+
+# --------------------------------------------------------------------------
+# array-method semantics (receiver of unknown type)
+# --------------------------------------------------------------------------
+
+#: methods that materialize on the host -> SEC001 when the receiver is secret
+ESCAPE_METHODS = frozenset({"item", "tolist", "tobytes"})
+
+#: arithmetic reductions: stay in the field but lose canonicity
+ARITH_METHODS = frozenset({
+    "sum", "prod", "dot", "matmul", "cumsum", "cumprod",
+    "mean", "var", "std", "trace",
+})
+
+#: attribute reads that are metadata, never data
+META_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "nbytes",
+                        "itemsize", "sharding"})
+
+#: method calls whose result depends only on shapes/dtypes, never on the
+#: argument values: jax AOT compilation and its analysis surfaces.  The
+#: result of `jit(f).lower(shares)` is a program, not the shares.
+META_METHODS = frozenset({"lower", "compile", "memory_analysis",
+                          "cost_analysis", "as_text", "as_hlo_text"})
+
+#: astype targets
+NARROW_DTYPES = frozenset({"int32", "uint32", "int16", "uint16",
+                           "int8", "uint8", "bool_"})
+FLOAT_DTYPES = frozenset({"float16", "float32", "float64", "float_",
+                          "double", "bfloat16", "complex64", "complex128"})
+
+# --------------------------------------------------------------------------
+# FLD exemptions: these modules ARE the arithmetic layer (limb packing,
+# bit-level folds) -- the FLD001/FLD002/FLD003 patterns are their job.
+# FLD004 (foreign modulus) still applies everywhere.
+# --------------------------------------------------------------------------
+
+FLD_EXEMPT_SUFFIXES = ("core/field.py", "core/quantize.py")
+FLD_EXEMPT_DIRS = ("kernels/",)
+
+
+def fld_exempt(relpath: str) -> bool:
+    rel = relpath.replace("\\", "/")
+    if rel.endswith(FLD_EXEMPT_SUFFIXES):
+        return True
+    return any(("/" + d) in rel or rel.startswith(d)
+               for d in FLD_EXEMPT_DIRS)
+
+
+def lookup_effect(dotted: str):
+    """Longest-prefix effect lookup; None when the name is unregistered."""
+    if dotted in EFFECTS:
+        return EFFECTS[dotted]
+    parts = dotted.split(".")
+    for cut in range(len(parts) - 1, 0, -1):
+        key = ".".join(parts[:cut]) + ".*"
+        if key in EFFECTS:
+            return EFFECTS[key]
+    return None

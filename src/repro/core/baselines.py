@@ -23,6 +23,7 @@ import numpy as np
 
 from . import field, mpc, objectives, quantize, shamir, sigmoid_approx, \
     truncation
+from .labels import Opened, Share
 from .protocol import CopmlConfig  # noqa: F401  (re-exported for callers)
 
 
@@ -168,9 +169,9 @@ def _float_objective_jit(obj, xj, yj, eta: float, iters: int,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class MpcState:
-    w_shares: jnp.ndarray      # (N_g, d, C') model shares (all groups share)
-    x_shares: jnp.ndarray      # (G, N_g, m/G, d) per-subgroup data shares
-    xty_shares: jnp.ndarray    # (G, N_g, d, C')
+    w_shares: Share            # (N_g, d, C') model shares (all groups share)
+    x_shares: Share            # (G, N_g, m/G, d) per-subgroup data shares
+    xty_shares: Share          # (G, N_g, d, C')
     step: jnp.ndarray | int = 0
 
 
@@ -282,7 +283,7 @@ class MpcBaseline:
             self._step = jax.jit(self.iteration)
         return self._step
 
-    def open_model(self, state: MpcState):
+    def open_model(self, state: MpcState) -> Opened:
         w = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)
         w = quantize.dequantize(w, self.cfg.lw)       # (d, C')
         return w[..., 0] if not self.obj.out_shape else w

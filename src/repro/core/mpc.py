@@ -26,21 +26,22 @@ import jax
 import jax.numpy as jnp
 
 from . import field, shamir
+from .labels import Opened, Share
 
 
-def add(xs, ys):
+def add(xs: Share, ys: Share) -> Share:
     return field.add(xs, ys)
 
 
-def sub(xs, ys):
+def sub(xs: Share, ys: Share) -> Share:
     return field.sub(xs, ys)
 
 
-def mul_public(xs, c: int):
+def mul_public(xs: Share, c: int) -> Share:
     return field.mul_scalar(xs, c)
 
 
-def add_public(xs, c: int):
+def add_public(xs: Share, c: int) -> Share:
     """Add a public constant: by convention added to every share (the
     constant is embedded as the degree-0 coefficient on all shares)."""
     return field.add(xs, jnp.full_like(xs, int(c) % field.P))
@@ -52,8 +53,8 @@ def _local_product(xs, ys, matmul: bool):
     return field.mul(xs, ys)
 
 
-def mul_bgw(key, xs, ys, t: int, *, matmul: bool = False,
-            points: Sequence[int] | None = None):
+def mul_bgw(key, xs: Share, ys: Share, t: int, *, matmul: bool = False,
+            points: Sequence[int] | None = None) -> Share:
     """BGW multiplication: local product (degree 2T shares) + re-share.
 
     Requires N >= 2T+1.  If matmul=True, xs:(N,A,B) @ ys:(N,B,C).
@@ -64,8 +65,8 @@ def mul_bgw(key, xs, ys, t: int, *, matmul: bool = False,
     return shamir.reshare(key, prod, t, n, points)
 
 
-def mul_bh08(key, xs, ys, t: int, *, matmul: bool = False,
-             points: Sequence[int] | None = None):
+def mul_bh08(key, xs: Share, ys: Share, t: int, *, matmul: bool = False,
+             points: Sequence[int] | None = None) -> Share:
     """[BH08] multiplication with an offline random pair.
 
     Offline: rho random; [rho]_T and [rho]_2T dealt.
@@ -87,7 +88,7 @@ def mul_bh08(key, xs, ys, t: int, *, matmul: bool = False,
     return field.add(rho_t, opened[None])
 
 
-def open_shares(xs, t: int, points: Sequence[int] | None = None,
-                subset: Sequence[int] | None = None):
+def open_shares(xs: Share, t: int, points: Sequence[int] | None = None,
+                subset: Sequence[int] | None = None) -> Opened:
     """Publicly reconstruct a shared value (e.g. the final model w^(J))."""
     return shamir.reconstruct(xs, t, points, subset)

@@ -42,6 +42,7 @@ import dataclasses
 import numpy as np
 
 from . import field, sigmoid_approx
+from .labels import Public
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +83,7 @@ class SecureObjective:
         """ghat's float coefficients c_0..c_r, lowest degree first."""
         raise NotImplementedError
 
-    def field_coeffs(self, cfg) -> np.ndarray:
+    def field_coeffs(self, cfg) -> Public:
         """Field-embedded ghat coefficients on the protocol's scale ladder:
         degree-i coefficient quantized at 2^(lg - i*lz) so ghat of an
         lz-scaled argument comes out at scale lg (App. A)."""

@@ -41,6 +41,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import (field, lagrange, meshutil, mpc, objectives, quantize, shamir,
                truncation)
+from .labels import Coded, Opened, Public, Share
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,9 +143,9 @@ class CopmlState:
     `w_shape` is the objective's model shape: (d,) for the vector
     objectives (binary logreg, linreg -- unchanged from the pre-objective
     protocol), (d, C) for the class-batched matrix model."""
-    w_shares: jnp.ndarray        # (N,) + w_shape   Shamir shares of w^(t)
-    coded_x: jnp.ndarray         # (N, mk, d)       clear coded slices X~_i
-    xty_shares: jnp.ndarray      # (N,) + w_shape   shares of X^T y (lx+lg)
+    w_shares: Share              # (N,) + w_shape   Shamir shares of w^(t)
+    coded_x: Coded               # (N, mk, d)       clear coded slices X~_i
+    xty_shares: Share            # (N,) + w_shape   shares of X^T y (lx+lg)
     step: jnp.ndarray | int = 0
 
 
@@ -248,7 +249,7 @@ class Copml:
 
     # ------------------------------------------------------- one GD iteration
 
-    def encode_model(self, key, w_shares):
+    def encode_model(self, key, w_shares: Share) -> Coded:
         """Phase 2 per-iteration: Lagrange-encode w from its shares.
 
         LOCAL on shares + EXCHANGE to reconstruct w~_j at client j.
@@ -279,7 +280,7 @@ class Copml:
         out = shamir.reconstruct(enc, cfg.t, self.lambdas, subset="all")
         return meshutil.maybe_constrain(out, meshutil.CLIENTS)   # (N, d)
 
-    def local_gradient(self, coded_x, coded_w):
+    def local_gradient(self, coded_x: Coded, coded_w: Coded) -> Coded:
         """Phase 3 (LOCAL, the hot loop): f(X~_i, w~_i) = X~_i^T ghat(X~_i w~_i).
 
         Pure field compute on *clear coded* data.  All N clients run in ONE
@@ -302,9 +303,9 @@ class Copml:
         return kernel_ops.coded_gradient_matrix(
             coded_x, w_mat, self.poly_coeffs)                    # (N, d, C)
 
-    def decode_and_update(self, key, state: CopmlState, f_values,
+    def decode_and_update(self, key, state: CopmlState, f_values: Coded,
                           subset: Sequence[int] | None = None, *,
-                          subset_idx=None, dvec=None):
+                          subset_idx=None, dvec=None) -> CopmlState:
         """Phase 4: share f, decode on shares, secure model update.
 
         The decode subset comes in one of two forms: a static `subset`
@@ -355,7 +356,7 @@ class Copml:
         new_w = field.sub(state.w_shares, delta_shares)
         return dataclasses.replace(state, w_shares=new_w, step=state.step + 1)
 
-    def _decode_vec(self, subset) -> np.ndarray:
+    def _decode_vec(self, subset) -> Public:
         """Host-side (R,) decode row: sum_k D[k, :] over the K decode-matrix
         rows, mod p.  Shared by the single-device and sharded engines so both
         trace the exact same public constant."""
@@ -557,7 +558,7 @@ class Copml:
                              int(iters), subset=subset, history=history)
         return (state, w, hist) if history else (state, w)
 
-    def open_model(self, state: CopmlState):
+    def open_model(self, state: CopmlState) -> Opened:
         """Reconstruct and dequantize the model (only done at the end /
         for evaluation; during training clients hold only shares)."""
         w_field = mpc.open_shares(state.w_shares, self.cfg.t, self.lambdas)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import field, quantize, shamir, truncation
+from .labels import Opened, Share
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +70,7 @@ def unflatten_grads(flat, meta):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def encode_local(key, grad_flat, cfg: SecureAggConfig):
+def encode_local(key, grad_flat, cfg: SecureAggConfig) -> Share:
     """Client-side: clip, quantize, Shamir-share own gradient.
 
     Returns (N, L) shares -- row i goes to host i (all_to_all on the mesh).
@@ -80,7 +81,7 @@ def encode_local(key, grad_flat, cfg: SecureAggConfig):
     return shamir.share(key, q, cfg.t, cfg.n_clients)
 
 
-def aggregate_shares(all_shares):
+def aggregate_shares(all_shares: Share) -> Share:
     """Holder-side: sum incoming shares (LOCAL -- field add only).
 
     all_shares: (N_owner, L) rows received by this holder.  Returns (L,)
@@ -92,8 +93,8 @@ def aggregate_shares(all_shares):
     return acc
 
 
-def decode_mean(key, sum_shares, cfg: SecureAggConfig,
-                subset: Sequence[int] | None = None, sel=None):
+def decode_mean(key, sum_shares: Share, cfg: SecureAggConfig,
+                subset: Sequence[int] | None = None, sel=None) -> Opened:
     """Reconstruct sum from any T+1 shares, secure-truncate to the mean.
 
     sum_shares: (N_holder, L) shares of the sum.  Uses TruncPr with
@@ -195,7 +196,8 @@ def _client_mean_grads(xs, ys, mask, w, objective=None):
     return g / jnp.sum(mask, axis=1)[:, None, None]
 
 
-def _secure_mean_step(key, g, cfg: SecureAggConfig, subset, sel=None):
+def _secure_mean_step(key, g, cfg: SecureAggConfig, subset,
+                      sel=None) -> Opened:
     """One aggregation round on (N, d) gradients: the same key schedule and
     field ops as secure_aggregate over [{'g': g[j]}] pytrees."""
     keys = jax.random.split(key, cfg.n_clients + 1)

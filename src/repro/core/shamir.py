@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import field
+from .labels import Opened, Share
 
 
 def default_eval_points(n: int, offset: int = 1) -> tuple:
@@ -46,7 +47,8 @@ def _recon_matrix(points: tuple) -> np.ndarray:
     return field.host_lagrange_coeffs(points, [0])
 
 
-def share(key, secret, t: int, n: int, points: Sequence[int] | None = None):
+def share(key, secret, t: int, n: int,
+          points: Sequence[int] | None = None) -> Share:
     """Create N Shamir shares of `secret` with threshold t.
 
     Returns int32 array of shape (N, *secret.shape).  One field matmul:
@@ -64,8 +66,8 @@ def share(key, secret, t: int, n: int, points: Sequence[int] | None = None):
     return field.add(mix.reshape((n,) + secret.shape), secret[None])
 
 
-def reconstruct(shares, t: int, points: Sequence[int] | None = None,
-                subset: Sequence[int] | None = None):
+def reconstruct(shares: Share, t: int, points: Sequence[int] | None = None,
+                subset: Sequence[int] | None = None) -> Opened:
     """Reconstruct the secret from shares (leading axis = clients).
 
     Any t+1 shares suffice; `subset` selects which client indices to use
@@ -125,7 +127,7 @@ def recon_weights(points: Sequence[int], subset: Sequence[int]) -> np.ndarray:
     return _recon_matrix(lams)[0]
 
 
-def reconstruct_dyn(shares, idx, weights):
+def reconstruct_dyn(shares: Share, idx, weights) -> Opened:
     """Reconstruct with TRACED subset indices and precomputed weights.
 
     idx: (r,) int32 gather indices into the client axis; weights: (r,) the
@@ -141,7 +143,7 @@ def reconstruct_dyn(shares, idx, weights):
 
 
 def share_batch(key, secrets, t: int, n: int,
-                points: Sequence[int] | None = None):
+                points: Sequence[int] | None = None) -> Share:
     """Share J independent secrets (leading axis = owners) in ONE matmul:
     secrets (J, ...) -> shares (J, N, ...).
 
@@ -152,7 +154,8 @@ def share_batch(key, secrets, t: int, n: int,
     return jnp.swapaxes(share(key, secrets, t, n, points), 0, 1)
 
 
-def reshare(key, shares, t: int, n: int, points: Sequence[int] | None = None):
+def reshare(key, shares: Share, t: int, n: int,
+            points: Sequence[int] | None = None) -> Share:
     """Degree reduction by re-sharing (BGW): every client re-shares its share
     with a fresh degree-t polynomial; the new shares of the secret are the
     lambda-weighted combination of the incoming sub-shares.

@@ -25,9 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from . import field, shamir
+from .labels import SecretRand, Share
 
 
-def trunc_pr_core(key, a_shares, k1: int, k2: int, share, open_):
+def trunc_pr_core(key, a_shares: Share, k1: int, k2: int,
+                  share, open_) -> Share:
     """TruncPr's arithmetic, parameterized over the share/open primitives.
 
     `share(key, secret)` deals Shamir shares of the offline randomness and
@@ -44,7 +46,8 @@ def trunc_pr_core(key, a_shares, k1: int, k2: int, share, open_):
     shape = a_shares.shape[1:]
     kr, ks1, ks2 = jax.random.split(key, 3)
     # offline correlated randomness (crypto-service provider / PRSS, fn. 3)
-    r = jax.random.randint(kr, shape, 0, 1 << k2, dtype=jnp.int32)
+    r: SecretRand = jax.random.randint(kr, shape, 0, 1 << k2,
+                                       dtype=jnp.int32)
     r0 = jnp.bitwise_and(r, (1 << k1) - 1)
     r_sh = share(ks1, r.astype(field.FIELD_DTYPE))
     r0_sh = share(ks2, r0.astype(field.FIELD_DTYPE))
@@ -63,7 +66,8 @@ def trunc_pr_core(key, a_shares, k1: int, k2: int, share, open_):
     return field.mul_scalar(num, inv_2k1)
 
 
-def trunc_pr(key, a_shares, k1: int, k2: int, t: int, points=None):
+def trunc_pr(key, a_shares: Share, k1: int, k2: int, t: int,
+             points=None) -> Share:
     """Probabilistic truncation of shared fixed-point values by 2^{k1}.
 
     a_shares: (N, ...) Shamir shares.  Returns (N, ...) shares of

@@ -15,6 +15,7 @@ from . import coded_gradient as _cg
 from . import field_poly as _fp
 from . import modmatmul as _mm
 from . import ref
+from ..core.labels import Coded, Public
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 # interpret-mode kernels are slow on CPU; route big shapes only when asked
@@ -86,8 +87,8 @@ def poly_eval(z, coeffs, *, block=None, force_pallas: bool = False):
     return out.reshape(shape)
 
 
-def coded_gradient(x, w, coeffs, *, bm=None, dc=None,
-                   force_pallas: bool = False):
+def coded_gradient(x: Coded, w: Coded, coeffs: Public, *, bm=None, dc=None,
+                   force_pallas: bool = False) -> Coded:
     """Fused f = x^T ghat(x w) over F_p (COPML Eq. 7)."""
     if not (USE_PALLAS or force_pallas):
         return ref.coded_gradient(x, w, coeffs)
@@ -101,8 +102,8 @@ def coded_gradient(x, w, coeffs, *, bm=None, dc=None,
     return out[:d0] if dpad else out
 
 
-def coded_gradient_batched(x, w, coeffs, *, bm=None, dc=None,
-                           force_pallas: bool = False):
+def coded_gradient_batched(x: Coded, w: Coded, coeffs: Public, *, bm=None,
+                           dc=None, force_pallas: bool = False) -> Coded:
     """f[n] = x[n]^T ghat(x[n] w[n]) for all N clients in ONE kernel launch.
 
     x: (N, m, d); w: (N, d); coeffs shared.  This is COPML's whole Phase-3
@@ -121,8 +122,8 @@ def coded_gradient_batched(x, w, coeffs, *, bm=None, dc=None,
     return out[:, :d0] if dpad else out
 
 
-def coded_gradient_matrix(x, w, coeffs, *, bm=None, dc=None,
-                          force_pallas: bool = False):
+def coded_gradient_matrix(x: Coded, w: Coded, coeffs: Public, *, bm=None,
+                          dc=None, force_pallas: bool = False) -> Coded:
     """f[n] = x[n]^T ghat(x[n] @ w[n]) for MATRIX models w: (N, d, C).
 
     The class-batched Phase-3 round of a multi-class objective: one

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import field
+from ..core.labels import Coded, Public
 
 
 def modmatmul(a, b):
@@ -28,14 +29,14 @@ def poly_eval(z, coeffs):
     return field.evaluate_poly_dyn(coeffs, z)
 
 
-def coded_gradient(x, w, coeffs):
+def coded_gradient(x: Coded, w: Coded, coeffs: Public) -> Coded:
     """f = x^T ghat(x w) over F_p, unfused two-pass reference."""
     z = field.matmul(x, w[:, None])[:, 0]
     g = field.evaluate_poly_dyn(coeffs, z)
     return field.matmul(x.T, g[:, None])[:, 0]
 
 
-def coded_gradient_vmap(x, w, coeffs):
+def coded_gradient_vmap(x: Coded, w: Coded, coeffs: Public) -> Coded:
     """Per-client baseline: vmap of the single-client reference.
 
     Kept as the benchmark baseline and as a second oracle for the batched
@@ -43,7 +44,7 @@ def coded_gradient_vmap(x, w, coeffs):
     return jax.vmap(lambda xi, wi: coded_gradient(xi, wi, coeffs))(x, w)
 
 
-def coded_gradient_batched(x, w, coeffs):
+def coded_gradient_batched(x: Coded, w: Coded, coeffs: Public) -> Coded:
     """f[n] = x[n]^T ghat(x[n] w[n]) for all clients; coeffs shared.
 
     Both passes use field.matvec_batched (limb-packed batched GEMM), which
@@ -54,7 +55,7 @@ def coded_gradient_batched(x, w, coeffs):
     return field.matvec_batched(jnp.swapaxes(x, 1, 2), g)  # (N, d)
 
 
-def coded_gradient_matrix(x, w, coeffs):
+def coded_gradient_matrix(x: Coded, w: Coded, coeffs: Public) -> Coded:
     """f[n] = x[n]^T ghat(x[n] @ w[n]) for a MATRIX model w: (N, d, C).
 
     The class-batched hot loop: the matvec pair of the vector path becomes

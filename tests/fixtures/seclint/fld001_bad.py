@@ -1,0 +1,7 @@
+"""FLD001: raw arithmetic on a field-domain array outside the wrappers."""
+from repro.core import field
+
+
+def raw_scale(x, y):
+    z = field.mul(x, y)
+    return z * 3

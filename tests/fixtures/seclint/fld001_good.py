@@ -1,0 +1,9 @@
+"""FLD001 no-fire: field wrappers, or raw ops dominated by `% field.P`."""
+from repro.core import field
+
+
+def wrapped_scale(x, y):
+    z = field.mul(x, y)
+    a = field.mul_scalar(z, 3)
+    b = (z * 3) % field.P
+    return field.add(a, b)

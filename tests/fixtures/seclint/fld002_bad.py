@@ -1,0 +1,7 @@
+"""FLD002: narrowing cast on an unreduced field accumulation."""
+from repro.core import field
+
+
+def narrow_unreduced(x, y):
+    acc = field.mul(x, y).sum(axis=0)
+    return acc.astype("int32")

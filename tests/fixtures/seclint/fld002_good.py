@@ -1,0 +1,7 @@
+"""FLD002 no-fire: the narrow is dominated by a `% field.P` reduction."""
+from repro.core import field
+
+
+def narrow_reduced(x, y):
+    acc = field.mul(x, y).sum(axis=0)
+    return (acc % field.P).astype("int32")

@@ -1,0 +1,9 @@
+"""FLD003: float dtype touches a field-domain array."""
+import numpy as np
+
+from repro.core import field
+
+
+def float_cast(x, y):
+    z = field.mul(x, y)
+    return z.astype(np.float32)

@@ -1,0 +1,9 @@
+"""FLD003 no-fire: floats only after leaving the field domain through
+the dequantize boundary."""
+from repro.core import field, quantize
+
+
+def dequantized(x, y, lq):
+    z = field.mul(x, y)
+    f = quantize.dequantize(z, lq)
+    return f * 0.5

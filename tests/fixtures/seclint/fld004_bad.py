@@ -1,0 +1,5 @@
+"""FLD004: a large modulus literal that is not field.P (2^26, off by 5)."""
+
+
+def wrong_modulus(x):
+    return x % 67108864

@@ -1,0 +1,9 @@
+"""FLD004 no-fire: `% field.P` and small index/block moduli are fine."""
+from repro.core import field
+
+
+def right_modulus(x, block):
+    a = x % field.P
+    b = x % 2
+    c = x % 128
+    return a, b, c

@@ -1,0 +1,8 @@
+"""SEC001: a Shamir share reaches a host escape (print / np.asarray)."""
+from repro.core import shamir
+
+
+def leak(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    print(s)
+    return s

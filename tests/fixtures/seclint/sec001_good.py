@@ -1,0 +1,10 @@
+"""SEC001 no-fire: the value is declassified through a sanctioned sink
+(shamir.reconstruct) before it reaches the host."""
+from repro.core import shamir
+
+
+def open_and_print(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    w = shamir.reconstruct(s, 1, pts)
+    print(w)
+    return w

@@ -1,0 +1,9 @@
+"""SEC002: Python control flow branches on a secret-derived value."""
+from repro.core import shamir
+
+
+def branch_on_share(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    if s[0] > 0:
+        return 1
+    return 0

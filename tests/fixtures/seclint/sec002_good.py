@@ -1,0 +1,9 @@
+"""SEC002 no-fire: branching on public metadata (shape) of a share is fine."""
+from repro.core import shamir
+
+
+def branch_on_shape(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    if s.shape[0] > 4:
+        return 1
+    return 0

@@ -1,0 +1,9 @@
+"""SEC003: a secret crosses into an unregistered external module."""
+import pickle
+
+from repro.core import shamir
+
+
+def serialize_share(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    return pickle.dumps(s)

@@ -1,0 +1,12 @@
+"""SEC003 no-fire: secrets may flow through registered safe roots
+(repro/jax/numpy device ops) and into sanctioned declassify sinks."""
+import jax.numpy as jnp
+
+from repro.core import mpc, shamir
+
+
+def reshape_and_open(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    s2 = jnp.swapaxes(s, 0, 1)
+    s3 = jnp.swapaxes(s2, 0, 1)
+    return mpc.open_shares(s3, 1, pts)

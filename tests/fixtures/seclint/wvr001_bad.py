@@ -1,0 +1,8 @@
+"""WVR001: malformed waiver pragmas (no reason / unknown rule id)."""
+from repro.core import shamir
+
+
+def leak(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    print(s)  # seclint: allow[SEC001]
+    return s  # seclint: allow[NOPE999] reason=unknown rule id

@@ -1,0 +1,12 @@
+"""Well-formed waivers: trailing-pragma and line-above styles, both used."""
+import numpy as np
+
+from repro.core import shamir
+
+
+def debug_dump(key, secret, pts):
+    s = shamir.share(key, secret, 1, 4, pts)
+    # seclint: allow[SEC001] reason=engine parity check, dumps shares only
+    host = np.asarray(s)
+    print(s)  # seclint: allow[SEC001] reason=trailing-style waiver
+    return host

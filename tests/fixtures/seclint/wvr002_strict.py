@@ -1,0 +1,7 @@
+"""WVR002 (strict only): a waiver that suppresses nothing."""
+from repro.core import field
+
+
+def fine(x, y):
+    # seclint: allow[FLD001] reason=this pragma is never consumed
+    return field.add(x, y)

@@ -45,8 +45,9 @@ class Stage:
 def build_stages() -> dict:
     """The stage registry, in execution order (kernel feeds fig3/table1)."""
     from . import (distributed_bench, fig3_speedup, fig4_accuracy,
-                   kernel_micro, multiclass_bench, resilience_bench,
-                   roofline_report, table1_breakdown, table2_complexity)
+                   kernel_micro, multiclass_bench, procnet_bench,
+                   resilience_bench, roofline_report, table1_breakdown,
+                   table2_complexity)
 
     def kernel(report, ctx):
         ctx["field_macs_per_s"] = kernel_micro.run(report)
@@ -65,6 +66,10 @@ def build_stages() -> dict:
               lambda report, ctx: resilience_bench.run(report),
               ("smoke_straggler", "copml", "jit"),
               "wall time under FaultPlan churn vs fault-free baseline"),
+        Stage("procnet",
+              lambda report, ctx: procnet_bench.run(report),
+              ("smoke", "copml", "proc:4"),
+              "multi-process socket runtime: measured wire bytes + wall"),
         Stage("multiclass",
               lambda report, ctx: multiclass_bench.run(report),
               ("mnist10_like", "copml", "jit"),

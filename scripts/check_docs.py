@@ -117,7 +117,9 @@ def check_api() -> list:
     problems = []
     names = (
         [("protocol", n) for n in api.protocol_names()]
-        + [("engine", n) for n in api.ENGINES]
+        # the LIVE kind registry (api.ENGINES is a frozen snapshot of the
+        # builtins): an engine registered later must be documented too
+        + [("engine", n) for n in api.engine_names()]
         + [("workload", n) for n in api.workload_names()]
         + [("objective", n) for n in api.objective_names()]
         + [("TrainResult field", f.name)

@@ -113,6 +113,17 @@ EFFECTS = {
     "repro.core.quantize.signed_value": {"kind": "dequant"},
     "repro.core.quantize.*": {"kind": "propagate"},
 
+    # --- multi-process runtime ---------------------------------------------
+    # share_payload is THE sanctioned cross-process sink: the runtime's
+    # equivalent of `-> Opened` for sends.  Its output is an opaque wire
+    # blob addressed to exactly one shareholder, so by the (t, N)-secrecy
+    # argument it carries no residual taint; any OTHER serialization of a
+    # share (`.tobytes()`, np.asarray, pickle) still flags SEC001/SEC003
+    # (tests/fixtures/seclint/procsend_bad.py proves it).
+    "repro.launch.runtime.wire.share_payload": {"kind": "declassify"},
+    "repro.launch.runtime.wire.pack_array": {"kind": "propagate"},
+    "repro.launch.runtime.*": {"kind": "propagate"},
+
     # --- everything else repro-internal ------------------------------------
     "repro.core.truncation.*": {"kind": "propagate"},
     "repro.core.meshutil.*": {"kind": "propagate"},
@@ -169,6 +180,7 @@ KNOWN_MODULES = frozenset(
     "jax.numpy", "jax.random", "jax.lax", "jax.debug", "numpy.testing",
     "repro.core", "repro.kernels", "repro.api", "repro.core.protocol",
     "repro.core.secure_agg", "repro.core.baselines", "repro.core.objectives",
+    "repro.launch", "repro.launch.runtime",
 })
 
 # --------------------------------------------------------------------------

@@ -32,8 +32,11 @@ from ..core.objectives import (OBJECTIVES, SecureObjective,
 from ..core.objectives import get as get_objective
 from ..core.objectives import names as objective_names
 from ..core.objectives import register as register_objective
-from .engine import EAGER, ENGINES, JIT, SHARDED, EngineSpec
+from .engine import (EAGER, ENGINES, JIT, PROC, SHARDED, EngineKind,
+                     EngineSpec, NetConfig)
+from .engine import names as engine_names
 from .engine import parse as parse_engine
+from .engine import register_kind as register_engine_kind
 from .faults import FaultPlan, FaultPlanViolation
 from .protocols import PROTOCOLS, Protocol, fit, run_copml_engine
 from .protocols import names as protocol_names
@@ -45,11 +48,12 @@ from .workloads import names as workload_names
 from .workloads import register as register_workload
 
 __all__ = [
-    "EAGER", "ENGINES", "JIT", "OBJECTIVES", "PROTOCOLS", "SHARDED",
-    "EngineSpec", "FaultPlan", "FaultPlanViolation", "Protocol",
-    "SecureObjective", "TrainResult", "WORKLOADS", "Workload",
-    "accuracy_curve", "accuracy_of", "fit", "get_objective", "get_workload",
-    "multiclass_logistic", "objective_names", "parse_engine",
-    "protocol_names", "register_objective", "register_protocol",
+    "EAGER", "ENGINES", "JIT", "OBJECTIVES", "PROC", "PROTOCOLS", "SHARDED",
+    "EngineKind", "EngineSpec", "FaultPlan", "FaultPlanViolation",
+    "NetConfig", "Protocol", "SecureObjective", "TrainResult", "WORKLOADS",
+    "Workload", "accuracy_curve", "accuracy_of", "engine_names", "fit",
+    "get_objective", "get_workload", "multiclass_logistic",
+    "objective_names", "parse_engine", "protocol_names",
+    "register_engine_kind", "register_objective", "register_protocol",
     "register_workload", "run_copml_engine", "workload_names",
 ]

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import argparse
 
-from . import ENGINES, PROTOCOLS, FaultPlan, fit, workload_names
+from . import PROTOCOLS, FaultPlan, engine_names, fit, workload_names
 from . import workloads as workloads_mod
 
 
@@ -24,7 +24,8 @@ def main(argv=None) -> None:
     ap.add_argument("--protocol", default="copml",
                     choices=sorted(PROTOCOLS))
     ap.add_argument("--engine", default="jit",
-                    help='"eager" | "jit" | "sharded[:N]"')
+                    help='"eager" | "jit" | "sharded[:N]" | "proc[:N]" '
+                         '(see --list for the live registry)')
     ap.add_argument("--iters", type=int, default=None,
                     help="GD iterations (default: the workload's)")
     ap.add_argument("--seed", type=int, default=0)
@@ -52,7 +53,9 @@ def main(argv=None) -> None:
         from . import objective_names
         print("workloads: ", ", ".join(workload_names()))
         print("protocols: ", ", ".join(sorted(PROTOCOLS)))
-        print("engines:   ", ", ".join(ENGINES))
+        # the LIVE kind registry, so engines registered after import
+        # (proc today, whatever comes next) appear without a CLI edit
+        print("engines:   ", ", ".join(engine_names()))
         print("objectives:", ", ".join(objective_names()))
         return
 

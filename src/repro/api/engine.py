@@ -2,7 +2,7 @@
 
 An engine decides how a protocol's training loop executes -- it never
 changes WHAT is computed (engine swaps are bit-exact for COPML, see
-tests/test_api.py):
+tests/test_api.py and tests/test_runtime_engine.py):
 
   eager    Python loop, one jitted step per iteration.  Ground truth and
            step-through debugging.
@@ -11,10 +11,16 @@ tests/test_api.py):
   sharded  jit with the client axis PHYSICALLY split over a 1-D
            ("clients",) mesh; every exchange is a real collective
            (all_to_all / reduce-scatter / all_gather).  COPML only.
+  proc     N OS processes over real localhost TCP sockets
+           (launch/runtime); communication is MEASURED, not modeled,
+           and stragglers emerge from network timing.  COPML only.
 
-`EngineSpec` is the value the facade passes around; `parse` accepts the
-spec itself, a plain string ("eager" | "jit" | "sharded" | "sharded:8"),
-or a jax Mesh (treated as sharded over that mesh).
+Engine kinds live in a registry (`register_kind` / `names`) so surfaces
+that enumerate engines -- repro-fit --list, scripts/check_docs.py --
+read the live set instead of a hardcoded tuple.  `EngineSpec` is the
+value the facade passes around; `parse` accepts the spec itself, a plain
+string ("eager" | "jit" | "sharded[:N]" | "proc[:N]"), or a jax Mesh
+(treated as sharded over that mesh).
 """
 
 from __future__ import annotations
@@ -22,37 +28,86 @@ from __future__ import annotations
 import dataclasses
 
 from ..core import meshutil
+from ..launch.runtime.config import NetConfig  # noqa: F401  (re-export)
 
-ENGINES = ("eager", "jit", "sharded")
+
+@dataclasses.dataclass(frozen=True)
+class EngineKind:
+    """One registered engine kind and what its specs may carry."""
+    name: str
+    doc: str
+    takes_devices: bool = False     # accepts ":N" / devices=
+    takes_mesh: bool = False        # accepts mesh=
+    takes_net: bool = False         # accepts net= (a NetConfig)
+
+
+KINDS: dict = {}
+
+
+def register_kind(kind: EngineKind) -> EngineKind:
+    """Add an engine kind to the registry (protocols opt in per-kind via
+    their `engines` tuple; registration only teaches spec parsing and
+    the enumeration surfaces about the name)."""
+    KINDS[kind.name] = kind
+    return kind
+
+
+def names() -> tuple:
+    """The LIVE engine-kind names, in registration order."""
+    return tuple(KINDS)
+
+
+register_kind(EngineKind(
+    "eager", "Python loop, one jitted step per iteration"))
+register_kind(EngineKind(
+    "jit", "whole training loop as one compiled XLA program"))
+register_kind(EngineKind(
+    "sharded", "client axis sharded over a ('clients',) mesh",
+    takes_devices=True, takes_mesh=True))
+register_kind(EngineKind(
+    "proc", "N OS processes over real TCP sockets (launch/runtime)",
+    takes_devices=True, takes_net=True))
+
+#: snapshot of the builtin kinds; enumeration surfaces should prefer the
+#: live `names()` so later-registered kinds appear automatically
+ENGINES = names()
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
-    """One execution strategy.  `devices`/`mesh` apply to sharded only:
-    mesh wins if given, else a ("clients",) mesh over `devices` devices
-    (None = all visible) is built at fit time."""
+    """One execution strategy.  `devices` is the shard/process count
+    (sharded and proc); `mesh` (sharded only) wins over `devices`; `net`
+    (proc only) is a launch.runtime NetConfig with the link model and
+    timeout policy."""
     kind: str
     devices: int | None = None
     mesh: object | None = None          # jax.sharding.Mesh
+    net: object | None = None           # launch.runtime NetConfig
 
     def __post_init__(self):
-        if self.kind not in ENGINES:
+        info = KINDS.get(self.kind)
+        if info is None:
             raise ValueError(
-                f"unknown engine kind {self.kind!r}; expected one of {ENGINES}")
+                f"unknown engine kind {self.kind!r}; expected one of "
+                f"{names()}")
         if self.devices is not None and self.devices < 1:
             raise ValueError(f"devices must be >= 1, got {self.devices}")
-        if self.kind != "sharded" and (self.devices is not None
-                                       or self.mesh is not None):
+        if not (info.takes_devices or info.takes_mesh) and (
+                self.devices is not None or self.mesh is not None):
             raise ValueError(f"engine {self.kind!r} takes no mesh/devices")
+        if self.mesh is not None and not info.takes_mesh:
+            raise ValueError(f"engine {self.kind!r} takes no mesh")
+        if self.net is not None and not info.takes_net:
+            raise ValueError(f"engine {self.kind!r} takes no net config")
 
     @property
     def label(self) -> str:
-        """Stable row label: "eager" | "jit" | "sharded" | "sharded:8"."""
-        if self.kind != "sharded":
-            return self.kind
+        """Stable row label: "jit" | "sharded:8" | "proc:4" | ..."""
         if self.mesh is not None:
-            return f"sharded:{self.mesh.size}"
-        return "sharded" if self.devices is None else f"sharded:{self.devices}"
+            return f"{self.kind}:{self.mesh.size}"
+        if self.devices is not None:
+            return f"{self.kind}:{self.devices}"
+        return self.kind
 
     def resolve_mesh(self):
         """The 1-D client mesh this spec runs on (sharded only)."""
@@ -65,6 +120,7 @@ class EngineSpec:
 EAGER = EngineSpec("eager")
 JIT = EngineSpec("jit")
 SHARDED = EngineSpec("sharded")
+PROC = EngineSpec("proc")
 
 
 def parse(spec) -> EngineSpec:
@@ -76,8 +132,9 @@ def parse(spec) -> EngineSpec:
     if isinstance(spec, str):
         kind, _, arg = spec.partition(":")
         if arg:
-            if kind != "sharded":
+            info = KINDS.get(kind)
+            if info is not None and not info.takes_devices:
                 raise ValueError(f"engine {kind!r} takes no :N suffix")
-            return EngineSpec("sharded", devices=int(arg))
+            return EngineSpec(kind, devices=int(arg))
         return EngineSpec(kind)
     raise TypeError(f"cannot parse engine spec {spec!r}")

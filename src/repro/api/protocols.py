@@ -140,10 +140,16 @@ class Protocol:
         # written against the pre-fault 6-arg _run contract keep working
         # for fault-free fits (docs/API.md extension example)
         if plan is None:
-            w, hist, state = self._run(wl, spec, key, iters, subset, history)
+            out = self._run(wl, spec, key, iters, subset, history)
         else:
-            w, hist, state = self._run(wl, spec, key, iters, subset, history,
-                                       plan)
+            out = self._run(wl, spec, key, iters, subset, history, plan)
+        # engines that MEASURE their communication (proc) return a 4th
+        # element; the in-process engines keep the 3-tuple contract
+        if len(out) == 4:
+            w, hist, state, measured = out
+        else:
+            w, hist, state = out
+            measured = None
         w = np.asarray(jax.block_until_ready(w))
         wall = time.perf_counter() - t0
 
@@ -160,7 +166,8 @@ class Protocol:
             final_accuracy=obj.score(w, x_eval, y_eval),
             per_class_accuracy=obj.per_class_accuracy(w, x_eval, y_eval),
             cost=self.cost(wl, iters), state=state,
-            availability=None if plan is None else plan.available.copy())
+            availability=None if plan is None else plan.available.copy(),
+            measured_comm=measured)
 
     def _resolve_plan(self, wl, iters: int, faults) -> faults_mod.FaultPlan:
         """Check a FaultPlan against this protocol and workload, truncate
@@ -277,7 +284,7 @@ def run_copml_engine(proto: Copml, spec, key, client_xs, client_ys,
 
 class CopmlProtocol(Protocol):
     name = "copml"
-    engines = ("eager", "jit", "sharded")
+    engines = ("eager", "jit", "sharded", "proc")
     supports_subset = True           # decode from any R of N clients
     supports_faults = True           # per-step FaultPlan schedules
 
@@ -304,6 +311,18 @@ class CopmlProtocol(Protocol):
     def _run(self, wl, spec, key, iters, subset, history, plan=None):
         proto = self.driver(wl)
         cx, cy = wl.client_data()
+        if spec.kind == "proc":
+            if plan is not None:
+                raise ValueError(
+                    "the proc engine has no FaultPlan replay: stragglers "
+                    "emerge from real socket timing -- inject latency / "
+                    "deadlines via EngineSpec('proc', net=NetConfig(...)) "
+                    "instead")
+            from ..launch import runtime
+            state, w, hist, measured = runtime.run_copml_proc(
+                proto, key, cx, cy, iters, procs=spec.devices,
+                net_cfg=spec.net, subset=subset, history=history)
+            return w, hist, state, measured
         step_subsets = adversaries = None
         if plan is not None:
             step_subsets = plan.subsets(wl.cfg.recovery_threshold)

@@ -1,0 +1,20 @@
+"""Multi-process COPML runtime: clients as OS processes over TCP.
+
+The `proc:N` engine (api.fit(..., engine="proc:4")): each worker process
+owns a contiguous client group and exchanges framed share/coded payloads
+over real localhost sockets; a coordinator process handles session setup
+and the opening barrier rounds.  See docs/RUNNING.md "Multi-process" and
+docs/ARCHITECTURE.md for the wire format and the measured-vs-modeled
+communication record.
+
+    wire      length-prefixed frame format + array payloads
+    net       async framed-TCP Node (latency injection, timeout/retry)
+    config    NetConfig: every network knob, env-overridable
+    worker    per-process client-group compute + socket collectives
+    session   coordinator: run_copml_proc, the engine entry point
+"""
+
+from .config import NetConfig
+from .session import DEFAULT_PROCS, run_copml_proc
+
+__all__ = ["NetConfig", "DEFAULT_PROCS", "run_copml_proc"]

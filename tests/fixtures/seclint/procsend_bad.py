@@ -1,0 +1,17 @@
+"""SEC001: a Shamir share is serialized onto a socket by hand.
+
+`.tobytes()` materializes the share on the host before the unregistered
+`sock.sendall` ever sees it -- the runtime's sends must go through the
+sanctioned `repro.launch.runtime.wire.share_payload` sink instead
+(see procsend_good.py).
+"""
+import socket
+
+from repro.core import shamir
+
+
+def leak_over_socket(key, secret, pts, addr):
+    s = shamir.share(key, secret, 1, 4, pts)
+    sock = socket.create_connection(addr)
+    sock.sendall(s.tobytes())
+    return sock

@@ -1,0 +1,20 @@
+"""SEC001 no-fire: the share crosses the process boundary through the
+sanctioned wire sink.
+
+`wire.share_payload` is registered as a declassify effect in
+analysis/registry.py: its output is an opaque framed blob addressed to a
+single shareholder, the runtime's equivalent of an `-> Opened`
+annotation.  The plain bytes it returns may then touch any transport.
+"""
+import socket
+
+from repro.core import shamir
+from repro.launch.runtime import wire
+
+
+def send_share_rows(key, secret, pts, addr):
+    s = shamir.share(key, secret, 1, 4, pts)
+    blob = wire.share_payload(s)
+    sock = socket.create_connection(addr)
+    sock.sendall(blob)
+    return sock

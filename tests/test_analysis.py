@@ -49,6 +49,8 @@ CORPUS = [
     ("sec002_good.py", []),
     ("sec003_bad.py", ["SEC003"]),
     ("sec003_good.py", []),
+    ("procsend_bad.py", ["SEC001"]),  # hand-rolled socket write of a Share
+    ("procsend_good.py", []),         # via the sanctioned wire.share_payload
     ("fld001_bad.py", ["FLD001"]),
     ("fld001_good.py", []),
     ("fld002_bad.py", ["FLD002"]),

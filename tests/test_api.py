@@ -397,8 +397,8 @@ def test_benchmark_stage_registry():
     brun = importlib.import_module("benchmarks.run")
     stages = brun.build_stages()
     assert set(stages) >= {"kernel", "engine", "distributed", "resilience",
-                           "multiclass", "fig3", "fig4", "table1", "table2",
-                           "roofline"}
+                           "procnet", "multiclass", "fig3", "fig4",
+                           "table1", "table2", "roofline"}
     for s in stages.values():
         assert len(s.triple) == 3, s
         assert s.doc

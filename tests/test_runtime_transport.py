@@ -1,0 +1,214 @@
+"""Wire-format + Node transport properties of the proc-engine runtime.
+
+Runs under real `hypothesis` where available, else the deterministic shim
+(tests/_hypothesis_compat.py).  Covers the frame codec (round-trips over
+payload sizes from empty to >64KiB, partial-read reassembly, malformed
+streams), the array payload codec, the NetConfig link model, and the
+per-link ordering guarantee of a live two-Node socket session under
+injected latency.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.runtime import net, wire
+from repro.launch.runtime.config import NetConfig
+
+#: payload sizes spanning the interesting boundaries: empty, sub-header,
+#: around the 64KiB socket-read chunk, and well past it
+SIZES = (0, 1, 15, 16, 17, 1024, (1 << 16) - 1, (1 << 16) + 7, (1 << 17) + 3)
+
+
+def _payload(size: int, seed: int) -> bytes:
+    if size == 0:
+        return b""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+# ---------------------------------------------------------------- frame codec
+
+@given(st.sampled_from(SIZES), st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_frame_round_trip(size, seed):
+    payload = _payload(size, seed)
+    kind = seed % 12 + 1
+    src, tag, step = seed % 0x10000, (seed >> 4) % 0x10000, seed
+    data = wire.encode_frame(kind, src, tag, step, payload)
+    frames = wire.FrameReader().feed(data)
+    assert len(frames) == 1
+    f = frames[0]
+    assert (f.kind, f.src, f.tag, f.step) == (kind, src, tag, step)
+    assert f.payload == payload
+    assert len(f) == len(data) == wire.HEADER_SIZE + size
+
+
+@given(st.integers(min_value=1, max_value=4099),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_partial_read_reassembly(chunk, seed):
+    """Any stream chunking yields the same frames in the same order."""
+    payloads = [_payload(sz, seed + i)
+                for i, sz in enumerate((0, 3, (1 << 16) + 1, 57))]
+    stream = b"".join(wire.encode_frame(net.ENC, 2, 0, i, p)
+                      for i, p in enumerate(payloads))
+    fr = wire.FrameReader()
+    got = []
+    for off in range(0, len(stream), chunk):
+        got.extend(fr.feed(stream[off:off + chunk]))
+    fr.close()
+    assert fr.pending == 0
+    assert [f.step for f in got] == [0, 1, 2, 3]
+    assert [f.payload for f in got] == payloads
+
+
+def test_truncated_stream_is_an_error():
+    data = wire.encode_frame(net.ENC, 0, 0, 0, b"x" * 100)
+    fr = wire.FrameReader()
+    assert fr.feed(data[:-1]) == []          # incomplete: nothing yet
+    assert fr.pending == len(data) - 1
+    with pytest.raises(wire.WireError, match="truncated"):
+        fr.close()
+
+
+def test_bad_magic_rejected():
+    data = b"XX" + wire.encode_frame(net.ENC, 0, 0, 0, b"hi")[2:]
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.FrameReader().feed(data)
+
+
+def test_unknown_version_rejected():
+    data = bytearray(wire.encode_frame(net.ENC, 0, 0, 0))
+    data[2] = wire.VERSION + 1
+    with pytest.raises(wire.WireError, match="version"):
+        wire.FrameReader().feed(bytes(data))
+
+
+def test_oversized_frame_rejected():
+    # a header claiming a length beyond the cap fails fast, before any
+    # payload byte is buffered
+    hdr = wire.HEADER.pack(wire.MAGIC, wire.VERSION, net.ENC, 0, 0, 0, 2048)
+    with pytest.raises(wire.WireError, match="exceeds"):
+        wire.FrameReader(max_payload=1024).feed(hdr)
+
+
+def test_oversized_payload_rejected_at_encode(monkeypatch):
+    monkeypatch.setattr(wire, "MAX_PAYLOAD", 64)
+    with pytest.raises(wire.WireError, match="exceeds"):
+        wire.encode_frame(net.ENC, 0, 0, 0, b"\0" * 65)
+
+
+# -------------------------------------------------------------- array payloads
+
+@given(st.sampled_from([("<i4", ()), ("<i4", (7,)), ("<i4", (4, 5)),
+                        ("<f4", (2, 3, 4)), ("<u1", (0,)),
+                        ("<i8", (1, 1, 1, 6))]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pack_array_round_trip(spec, seed):
+    dtype, shape = np.dtype(spec[0]), spec[1]
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, 100, size=shape).astype(dtype)
+    out = wire.unpack_array(wire.pack_array(arr))
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_array_payload_length_validated():
+    blob = wire.pack_array(np.arange(6, dtype=np.int32).reshape(2, 3))
+    with pytest.raises(wire.WireError, match="needs"):
+        wire.unpack_array(blob[:-2])
+    with pytest.raises(wire.WireError, match="shorter"):
+        wire.unpack_array(b"")
+
+
+def test_share_payload_is_pack_array():
+    arr = np.arange(12, dtype=np.int32).reshape(3, 4)
+    assert wire.share_payload(arr) == wire.pack_array(arr)
+
+
+# ------------------------------------------------------------------ NetConfig
+
+def test_link_latency_most_specific_wins():
+    cfg = NetConfig(latency_s=0.01,
+                    links=((None, 2, 0.5), (1, 2, 0.2), (1, None, 0.3)))
+    assert cfg.link_latency(1, 2) == 0.2     # exact (src, dst) beats both
+    assert cfg.link_latency(0, 2) == 0.5     # dst-only wildcard
+    assert cfg.link_latency(1, 0) == 0.3     # src-only wildcard
+    assert cfg.link_latency(0, 0) == 0.01    # default
+
+
+def test_bandwidth_adds_serialization_delay():
+    cfg = NetConfig(latency_s=0.1, bandwidth_bps=1000.0)
+    assert cfg.delay(0, 1, 500) == pytest.approx(0.6)
+    assert NetConfig().delay(0, 1, 10**9) == 0.0   # infinite by default
+
+
+def test_from_env_reads_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_PROC_LATENCY_S", "0.25")
+    monkeypatch.setenv("REPRO_PROC_TIMEOUT_S", "7")
+    monkeypatch.setenv("REPRO_PROC_RETRIES", "2")
+    cfg = NetConfig.from_env()
+    assert (cfg.latency_s, cfg.recv_timeout_s, cfg.recv_retries) \
+        == (0.25, 7.0, 2)
+
+
+# ------------------------------------------------- live sockets: link ordering
+
+def test_per_link_order_preserved_under_latency():
+    """Frames on one link arrive in send order even when injected delays
+    differ per frame (bandwidth makes big frames slower): the receiver
+    drains each connection with ONE sequential task, so a slow link
+    serializes, it never reorders."""
+    # descending sizes: were delays applied concurrently, the small late
+    # frames would overtake the big early ones
+    payloads = [_payload(sz, i) for i, sz in
+                enumerate(((1 << 16) + 5, 4096, 512, 64, 0))]
+    cfg = NetConfig(latency_s=0.01, bandwidth_bps=4e6)
+    a = net.Node(0, cfg=cfg).start()
+    b = net.Node(1, cfg=cfg).start(listen=False)
+    try:
+        b.connect(0, cfg.host, a.port)
+        for i, p in enumerate(payloads):
+            b.send(0, net.ENC, step=i, payload=p, phase="encode")
+        got = [a.recv(net.ENC, src=1, timeout=10.0)
+               for _ in range(len(payloads))]
+        assert [f.step for f in got] == list(range(len(payloads)))
+        assert [f.payload for f in got] == payloads
+        # every send was metered into the sender's phase counters
+        assert b.sent_frames["encode"] == len(payloads)
+        assert b.sent_bytes["encode"] == sum(
+            wire.HEADER_SIZE + len(p) for p in payloads)
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_recv_timeout_raises_nodetimeout():
+    cfg = NetConfig(recv_timeout_s=0.05, recv_retries=2)
+    a = net.Node(0, cfg=cfg).start()
+    try:
+        with pytest.raises(net.NodeTimeout, match="no SHARE frame"):
+            a.recv(net.SHARE, src=3, step=0)
+    finally:
+        a.stop()
+
+
+def test_stale_step_frames_are_dropped():
+    """A slow peer's frame for a PAST step must not satisfy a later
+    step's recv (the elastic-decode staleness rule)."""
+    cfg = NetConfig(recv_timeout_s=0.2, recv_retries=1)
+    a = net.Node(0, cfg=cfg).start()
+    b = net.Node(1, cfg=cfg).start(listen=False)
+    try:
+        b.connect(0, cfg.host, a.port)
+        b.send(0, net.SHARE, step=0, payload=b"late")
+        b.send(0, net.SHARE, step=2, payload=b"fresh")
+        got = a.recv(net.SHARE, src=1, step=2, timeout=5.0)
+        assert got.payload == b"fresh"
+        with pytest.raises(net.NodeTimeout):
+            a.recv(net.SHARE, src=1, step=2, timeout=0.05, retries=1)
+    finally:
+        a.stop()
+        b.stop()

@@ -1,0 +1,73 @@
+"""Analysis benchmark: the static analyzers ARE a CI gate, so their wall
+time is a product metric -- a slow linter erodes the fast lane's budget.
+
+Times three configurations over the real src/repro tree:
+
+* both pass families cold (what the PR fast-lane gate runs);
+* the comm pass alone (the choreography checker's marginal cost);
+* the sec pass warm through a FindingsCache (what `--changed-only
+  --cache` runs approach as the cache fills).
+
+All three must stay clean -- a finding here means the gate is red, which
+is a correctness failure, not a perf number -- so `run` asserts on it.
+Derived strings carry the file/finding counts and the cache hit rate.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+_SRC_REPRO = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "src", "repro")
+
+
+def _timed(fn, reps: int = 3):
+    """Best-of-`reps` wall time: sub-second analyzer runs jitter well
+    past the bench gate's threshold on a loaded host; min() is the
+    standard de-noiser for CPU-bound microbenchmarks."""
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def run(report) -> None:
+    from repro.analysis import analyze_paths
+    from repro.analysis.cache import FindingsCache
+
+    res, us = _timed(lambda: analyze_paths([_SRC_REPRO], package="repro"),
+                     reps=5)
+    assert res.active == [], [str(f) for f in res.active]
+    report("analysis/both_passes_cold", us,
+           f"{len(res.files)}files_0findings")
+
+    # the marginal configurations jitter past the bench gate's threshold
+    # on a loaded host (they re-parse the whole tree in ~250ms); keep
+    # their numbers visible in `derived` but out of the wall gate, like
+    # procnet/setup_wall
+    res, us = _timed(
+        lambda: analyze_paths([_SRC_REPRO], package="repro",
+                              passes=("comm",)))
+    assert res.active == []
+    report("analysis/comm_pass_cold", 0.0,
+           f"{us / 1e3:.0f}ms_{len(res.files)}files")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = FindingsCache(os.path.join(tmp, "cache.json"))
+        analyze_paths([_SRC_REPRO], package="repro", passes=("sec",),
+                      cache=cache)
+        cache.save()
+        warm = FindingsCache(os.path.join(tmp, "cache.json"))
+        res, us = _timed(
+            lambda: analyze_paths([_SRC_REPRO], package="repro",
+                                  passes=("sec",), cache=warm))
+        assert res.active == []
+        total = warm.hits + warm.misses
+        report("analysis/sec_pass_warm_cache", 0.0,
+               f"{us / 1e3:.0f}ms_{warm.hits}of{total}cache_hits")

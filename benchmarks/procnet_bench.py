@@ -18,9 +18,18 @@ _ENGINE = "proc:4"
 
 def run(report) -> None:
     from repro import api
+    from repro.analysis import choreography
 
     res = api.fit(_WL, "copml", _ENGINE, key=0, iters=ITERS, history=False)
     mc = res.measured_comm
+    # the measured frame counts are deterministic and must equal the
+    # static choreography budget bit for bit (commlint's COM009 spec);
+    # a drift here is a protocol bug, not a perf regression
+    static = choreography.frames_by_phase(mc["procs"], ITERS, history=False)
+    assert mc["frames_by_phase"] == static, (mc["frames_by_phase"], static)
+    report("procnet/frames_vs_static", 0.0,
+           f"{sum(static.values())}frames_bit_exact_"
+           f"{sum(mc['dropped_frames'].values())}dropped")
     report("procnet/fit_wall", mc["wall_s"] * 1e6,
            f"{mc['procs']}procs_{ITERS}it")
     # spawn + per-worker jax import dominate and are host-noisy: keep the

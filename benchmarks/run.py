@@ -44,10 +44,10 @@ class Stage:
 
 def build_stages() -> dict:
     """The stage registry, in execution order (kernel feeds fig3/table1)."""
-    from . import (distributed_bench, fig3_speedup, fig4_accuracy,
-                   kernel_micro, multiclass_bench, procnet_bench,
-                   resilience_bench, roofline_report, table1_breakdown,
-                   table2_complexity)
+    from . import (analysis_bench, distributed_bench, fig3_speedup,
+                   fig4_accuracy, kernel_micro, multiclass_bench,
+                   procnet_bench, resilience_bench, roofline_report,
+                   table1_breakdown, table2_complexity)
 
     def kernel(report, ctx):
         ctx["field_macs_per_s"] = kernel_micro.run(report)
@@ -70,6 +70,10 @@ def build_stages() -> dict:
               lambda report, ctx: procnet_bench.run(report),
               ("smoke", "copml", "proc:4"),
               "multi-process socket runtime: measured wire bytes + wall"),
+        Stage("analysis",
+              lambda report, ctx: analysis_bench.run(report),
+              ("src/repro", "-", "static"),
+              "seclint+commlint static-analysis gate wall time"),
         Stage("multiclass",
               lambda report, ctx: multiclass_bench.run(report),
               ("mnist10_like", "copml", "jit"),

@@ -12,8 +12,12 @@ Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
    protocol, engine, workload, and objective name and every TrainResult
    field must appear there (imports the package, so a stale doc fails the
    lint);
-5. docs/ANALYSIS.md covers the live seclint rule registry: every rule ID
-   in repro.analysis.RULES must appear in the catalog.
+5. docs/ANALYSIS.md covers the live analyzer rule registry: every rule
+   ID in repro.analysis.RULES (seclint's SEC/FLD/WVR and commlint's COM
+   families) must appear in the catalog;
+6. docs/ARCHITECTURE.md's wire-protocol round table covers the live
+   choreography spec: every frame kind in
+   repro.analysis.choreography.KINDS must appear there.
 
 Exit code 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -159,6 +163,31 @@ def check_analysis() -> list:
     return problems
 
 
+def check_wire_kinds() -> list:
+    """docs/ARCHITECTURE.md must name every LIVE wire frame kind: the
+    round table there is the human-readable twin of commlint's
+    choreography spec, and a kind added to one but not the other is
+    exactly the drift COM007 exists to catch in code."""
+    path = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+    with open(path) as f:
+        text = f.read()
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        from repro.analysis.choreography import KINDS
+    except Exception as e:  # noqa: BLE001 -- an unimportable spec IS a finding
+        return [f"choreography spec failed to import for the docs lint: "
+                f"{e!r}"]
+    problems = []
+    for kind in KINDS:
+        if f"`{kind}`" not in text:
+            problems.append(
+                f"docs/ARCHITECTURE.md: wire kind `{kind}` is in the "
+                "choreography spec but missing from the round table")
+    return problems
+
+
 def main() -> int:
     doc_text = ""
     for rel in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
@@ -169,7 +198,7 @@ def main() -> int:
         with open(path) as f:
             doc_text += f.read()
     problems = (check_packages(doc_text) + check_links() + check_commands()
-                + check_api() + check_analysis())
+                + check_api() + check_analysis() + check_wire_kinds())
     for p in problems:
         print(p)
     if not problems:

@@ -1,8 +1,19 @@
-"""seclint: secrecy-taint + field-arithmetic static analyzer for the MPC hot path.
+"""Static analyzers for the COPML hot path: seclint + commlint.
 
-Run it as `python -m repro.analysis src/repro` (or `scripts/seclint.py`).
-See docs/ANALYSIS.md for the rule catalog, the taint model, and the
-waiver-pragma grammar.
+Two pass families share one engine, waiver grammar, report format, and
+CLI (`python -m repro.analysis src/repro`, or `scripts/seclint.py`):
+
+  * **sec** (seclint, SEC/FLD/WVR rules): secrecy-taint + field
+    arithmetic analysis of the MPC compute path.
+  * **comm** (commlint, COM rules): choreography + comm-cost analysis of
+    the multi-process protocol -- call sites of the proc-engine runtime
+    diffed against the declarative round spec in `choreography.py`, plus
+    the static frame budget cross-checked against `core/cost_model.py`.
+
+`--pass {sec,comm,all}` selects a family; `--changed-only` restricts to
+git-dirty files; `--cache PATH` memoizes per-file sec findings.  See
+docs/ANALYSIS.md for the rule catalog, the taint model, the choreography
+grammar, and the waiver-pragma grammar.
 
 Public API:
     analyze_paths(paths, ...) -> AnalysisResult (.findings / .active /

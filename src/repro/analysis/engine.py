@@ -24,6 +24,7 @@ import ast
 import os
 from dataclasses import dataclass, field as dc_field
 
+from . import commlint
 from . import scope as scope_mod
 from . import waivers as waivers_mod
 from .registry import (
@@ -952,7 +953,29 @@ def _modname_for(path, package=""):
     return ".".join(parts) if parts else stem
 
 
-def analyze_paths(paths, *, package="", strict=False, apply_scope=True):
+def _analyze_module_sec(index, mi):
+    """The per-file seclint pass; returns this module's findings.
+
+    Self-contained (depends only on the module + the finalized index) so
+    results can be memoized by a FindingsCache keyed on file stats."""
+    findings: list[Finding] = []
+    top = FunctionAnalyzer(index, mi, findings)
+    top.run_module_level(mi.tree.body)
+    for fi in mi.functions.values():
+        fa = FunctionAnalyzer(index, mi, findings)
+        fa.run_function(fi)
+    for ci in mi.classes.values():
+        for fi in ci.methods.values():
+            if fi.module != mi.modname:  # inherited: analyzed at origin
+                continue
+            fa = FunctionAnalyzer(index, mi, findings,
+                                  enclosing_class=ci)
+            fa.run_function(fi)
+    return findings
+
+
+def analyze_paths(paths, *, package="", strict=False, apply_scope=True,
+                  passes=("sec", "comm"), only_files=None, cache=None):
     """Analyze files/trees; returns an AnalysisResult.
 
     `package` forces the dotted package context of explicitly-listed
@@ -960,6 +983,14 @@ def analyze_paths(paths, *, package="", strict=False, apply_scope=True):
     against the registry).  Directory walks honour the scope config
     unless `apply_scope` is False; explicitly-listed files are always
     analyzed.
+
+    `passes` selects the rule families: "sec" (seclint taint + field
+    rules) and/or "comm" (commlint choreography rules).  `only_files`
+    (absolute paths) restricts which files are *analyzed* -- everything
+    is still indexed, so cross-module resolution and commlint's
+    worker/session group discovery see the whole tree (this backs
+    --changed-only).  `cache` is an optional FindingsCache memoizing the
+    per-file sec pass across runs.
     """
     index = ProjectIndex()
     findings: list[Finding] = []
@@ -979,6 +1010,8 @@ def analyze_paths(paths, *, package="", strict=False, apply_scope=True):
                 continue
             index.add(mi)
             run = explicit or not apply_scope or scope_mod.in_scope(path)
+            if run and only_files is not None:
+                run = os.path.abspath(path) in only_files
             selected.append((mi, run))
     index.finalize()
 
@@ -989,18 +1022,20 @@ def analyze_paths(paths, *, package="", strict=False, apply_scope=True):
         wmap, problems = waivers_mod.scan_file(mi.path, mi.source)
         waiver_maps[mi.path] = wmap
         findings.extend(problems)
-        top = FunctionAnalyzer(index, mi, findings)
-        top.run_module_level(mi.tree.body)
-        for fi in mi.functions.values():
-            fa = FunctionAnalyzer(index, mi, findings)
-            fa.run_function(fi)
-        for ci in mi.classes.values():
-            for fi in ci.methods.values():
-                if fi.module != mi.modname:  # inherited: analyzed at origin
-                    continue
-                fa = FunctionAnalyzer(index, mi, findings,
-                                      enclosing_class=ci)
-                fa.run_function(fi)
+        if "sec" not in passes:
+            continue
+        cached = cache.get(mi, index) if cache is not None else None
+        if cached is not None:
+            findings.extend(cached)
+            continue
+        file_findings = _analyze_module_sec(index, mi)
+        if cache is not None:
+            cache.put(mi, index, file_findings)
+        findings.extend(file_findings)
+
+    if "comm" in passes:
+        findings.extend(commlint.collect(
+            index, [mi.path for mi, run in selected if run]))
 
     # dedup (loop fixpoints walk bodies twice) and stable order
     seen = set()

@@ -56,6 +56,26 @@ RULES = {
     "FLD004": "modulus literal other than field.P",
     "WVR001": "malformed seclint waiver pragma",
     "WVR002": "unused seclint waiver pragma (strict mode only)",
+    # --- commlint (the `comm` pass): choreography + comm-cost rules -------
+    "COM001": "orphan send: a wire kind is sent but no matching recv "
+              "site exists for the receiving role",
+    "COM002": "unfulfillable recv: a wire kind is awaited but never "
+              "sent by the declared sending role",
+    "COM003": "cardinality/addressing mismatch: call site's peer-loop "
+              "shape or peer role contradicts the round's declared legs",
+    "COM004": "step/tag/phase discipline violation on a wire site or "
+              "across a matched send/recv pair",
+    "COM005": "choreography deadlock: missing barrier leg, "
+              "uninstantiated round, or a recv-before-send cycle in "
+              "the progress simulation",
+    "COM006": "adaptive-collect violation: recv_any without a bounded "
+              "timeout, or an adaptive round with no recv_any site",
+    "COM007": "inventory failure: wire kind absent from the "
+              "choreography spec, or spec/transport kind-table drift",
+    "COM008": "pickle payload outside the registered control frames "
+              "(LISTEN/SESSION/RESULT), or ad-hoc bytes on an array round",
+    "COM009": "static frame budget divergence between the choreography "
+              "spec and core/cost_model.proc_net_frames",
 }
 
 # --------------------------------------------------------------------------

@@ -107,3 +107,38 @@ def speedup(w: Workload, hw: WanParams = WanParams(),
     base = mpc_baseline_costs(w, hw, scheme)["total_s"]
     ours = copml_costs(w, hw)["total_s"]
     return base / ours
+
+
+def proc_net_frames(procs: int, iters: int, history: bool = False) -> dict:
+    """Exact per-phase SENT frame counts of one clean proc:P run.
+
+    The analytic side of the modeled-vs-measured story for the
+    multi-process engine: commlint (COM009) cross-checks these closed
+    forms against the frame budget derived from the choreography spec in
+    analysis/choreography.py, and the procnet benchmark + engine tests
+    compare both against the live measured_comm["frames_by_phase"]
+    counters bit-for-bit.  Frames are counted at the SEND side (sends
+    never block), so the totals are timing-invariant: stale frames a
+    slow worker's recv_any later drops are still counted here and only
+    show up separately in measured_comm["dropped_frames"].
+
+    Closed forms (P = procs, J = iters):
+      setup      = P(P-1)/2 + 6P   HELLO mesh + coordinator dials, then
+                                   LISTEN/SESSION/READY/START/BYE and
+                                   the per-worker HELLO to the coord
+      encode     = P(P-1) * J      ENC all-to-all
+      exchange   = P(P-1) * J      SHARE all-to-all
+      trunc_open = 2P * J          OPEN gather + OPENED broadcast
+      open_model = P*J [history] + P   per-step opening + RESULT
+    Zero-count phases are omitted so the dict compares directly with
+    measured_comm["frames_by_phase"] at any P.
+    """
+    p, j = int(procs), int(iters)
+    out = {
+        "setup": p * (p - 1) // 2 + 6 * p,
+        "encode": p * (p - 1) * j,
+        "exchange": p * (p - 1) * j,
+        "trunc_open": 2 * p * j,
+        "open_model": (p * j if history else 0) + p,
+    }
+    return {phase: n for phase, n in out.items() if n}

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import asyncio
 import collections
+import json
 import queue
 import threading
 import time
@@ -79,6 +80,12 @@ class Node:
         self.port = None
         self.sent_bytes: dict = {}
         self.sent_frames: dict = {}
+        #: stale frames discarded by the drop-past-steps rule, keyed by
+        #: kind name.  Receiver-side accounting only: the sender already
+        #: counted these under sent_frames, so the per-phase sent totals
+        #: stay timing-invariant (and equal to the static budget) no
+        #: matter how many late frames get dropped here.
+        self.dropped_frames: dict = {}
         #: optional out-of-band liveness probe, called between recv
         #: retries (the coordinator checks worker exit codes here)
         self.liveness = None
@@ -171,9 +178,15 @@ class Node:
 
     def _dispatch(self, frame):
         if frame.kind == ERR:
-            self._errors.append(
-                f"peer {frame.src} failed: "
-                f"{frame.payload.decode('utf-8', 'replace')}")
+            # ERR payloads are UTF-8 JSON ({"rank": int, "error": str});
+            # fall back to the raw text so a malformed report still
+            # surfaces instead of masking the original failure.
+            text = frame.payload.decode("utf-8", "replace")
+            try:
+                text = json.loads(text)["error"]
+            except (ValueError, TypeError, KeyError):
+                pass
+            self._errors.append(f"peer {frame.src} failed: {text}")
             return
         self._queue(frame.kind).put(frame)
 
@@ -269,6 +282,7 @@ class Node:
             if drop_below is not None:
                 for i in range(len(pend) - 1, -1, -1):
                     if pend[i].step < drop_below:
+                        self._drop(kind)
                         del pend[i]
             for i, f in enumerate(pend):
                 if match(f):
@@ -285,8 +299,13 @@ class Node:
             if match(f):
                 return f
             if drop_below is not None and f.step < drop_below:
-                continue                      # stale: a passed step's frame
+                self._drop(kind)              # stale: a passed step's frame
+                continue
             pend.append(f)
+
+    def _drop(self, kind):
+        name = KIND_NAMES.get(kind, str(kind))
+        self.dropped_frames[name] = self.dropped_frames.get(name, 0) + 1
 
     def _raise_errors(self):
         if self._errors:
@@ -296,4 +315,5 @@ class Node:
 
     def stats(self) -> dict:
         return {"bytes": dict(self.sent_bytes),
-                "frames": dict(self.sent_frames)}
+                "frames": dict(self.sent_frames),
+                "dropped": dict(self.dropped_frames)}

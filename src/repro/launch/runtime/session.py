@@ -125,8 +125,14 @@ def run_copml_proc(proto, key, client_xs, client_ys, iters: int, *,
                     np.asarray(quantize.dequantize(wf, cfg.lw)))
 
         results = {}
+        result_wire = 0
         for r in range(P):
-            results[r] = pickle.loads(node.recv(net.RESULT, src=r).payload)
+            frm = node.recv(net.RESULT, src=r)
+            # the RESULT payload carries the worker's own send counters,
+            # so the worker cannot count this frame itself (fixed point);
+            # the coordinator meters the exact bytes it received instead.
+            result_wire += wire.HEADER_SIZE + len(frm.payload)
+            results[r] = pickle.loads(frm.payload)
             node.send(r, net.BYE)
         w_shares = jnp.concatenate(
             [jnp.asarray(wire.unpack_array(results[r]["w"]))
@@ -145,7 +151,8 @@ def run_copml_proc(proto, key, client_xs, client_ys, iters: int, *,
             hist = np.stack(hist_rows) if hist_rows else \
                 np.zeros((0,) + proto.w_shape, np.float32)
         measured = _assemble_measured(results, node, P, iters,
-                                      time.perf_counter() - t0, setup_wall)
+                                      time.perf_counter() - t0, setup_wall,
+                                      result_wire)
         return state, w, hist, measured
     finally:
         node.stop()
@@ -166,12 +173,24 @@ def _gather_rows(node, P: int, step: int, tag: int):
     return jnp.concatenate(rows, axis=0)
 
 
-def _assemble_measured(results, node, P, iters, wall, setup_wall) -> dict:
+def _assemble_measured(results, node, P, iters, wall, setup_wall,
+                       result_wire) -> dict:
     """Merge per-node counters: bytes sum over every process (each frame
     is sent exactly once), per-phase seconds take the max over workers
-    (the slowest rank is the step's critical path)."""
+    (the slowest rank is the step's critical path).  `result_wire` is the
+    coordinator-metered size of the P RESULT frames, which the workers
+    cannot self-count."""
     bytes_by_phase = dict(node.sent_bytes)
     frames_by_phase = dict(node.sent_frames)
+    bytes_by_phase["open_model"] = (bytes_by_phase.get("open_model", 0)
+                                    + result_wire)
+    frames_by_phase["open_model"] = (frames_by_phase.get("open_model", 0)
+                                     + P)
+    # receiver-side stale-drop counts sum across every process; they are
+    # deliberately NOT part of frames_by_phase, which counts sends only
+    # and therefore matches the static choreography budget exactly even
+    # on degraded runs (a dropped frame was still sent).
+    dropped_frames = dict(node.dropped_frames)
     seconds_by_phase: dict = {}
     degraded = 0
     for res in results.values():
@@ -179,6 +198,8 @@ def _assemble_measured(results, node, P, iters, wall, setup_wall) -> dict:
             bytes_by_phase[k] = bytes_by_phase.get(k, 0) + v
         for k, v in res["frames"].items():
             frames_by_phase[k] = frames_by_phase.get(k, 0) + v
+        for k, v in res.get("dropped", {}).items():
+            dropped_frames[k] = dropped_frames.get(k, 0) + v
         for k, v in res["seconds"].items():
             seconds_by_phase[k] = max(seconds_by_phase.get(k, 0.0), v)
         degraded = max(degraded, res["degraded_steps"])
@@ -189,6 +210,7 @@ def _assemble_measured(results, node, P, iters, wall, setup_wall) -> dict:
         "bytes_by_phase": bytes_by_phase,
         "total_bytes": sum(bytes_by_phase.values()),
         "frames_by_phase": frames_by_phase,
+        "dropped_frames": dropped_frames,
         "seconds_by_phase": seconds_by_phase,
         "degraded_steps": degraded,
         "setup_wall_s": setup_wall,

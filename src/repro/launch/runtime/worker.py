@@ -25,6 +25,7 @@ network timing.
 from __future__ import annotations
 
 import contextlib
+import json
 import pickle
 import time
 import traceback
@@ -77,8 +78,12 @@ def worker_entry(rank: int, coord_host: str, coord_port: int):
         raise SystemExit(1)          # the coordinator already knows
     except Exception:  # noqa: BLE001 -- report ANY failure upstream
         try:
-            node.send(net.COORD, net.ERR,
-                      payload=traceback.format_exc().encode())
+            # ERR is a plain-scalar UTF-8 JSON control frame (never
+            # pickle: the coordinator must not unpickle from a possibly
+            # compromised worker).
+            node.send(net.COORD, net.ERR, payload=json.dumps(
+                {"rank": rank, "error": traceback.format_exc()},
+            ).encode("utf-8"))
             time.sleep(0.2)          # let the frame flush before exit
         except Exception:  # noqa: BLE001
             pass
@@ -283,6 +288,7 @@ def _run_session(node: net.Node, sess: dict):
             "seconds": dict(clock.seconds),
             "bytes": dict(node.sent_bytes),
             "frames": dict(node.sent_frames),
+            "dropped": dict(node.dropped_frames),
             "degraded_steps": degraded,
             "wall_s": time.perf_counter() - t_start,
         }), phase="open_model")

@@ -1,0 +1,35 @@
+"""commlint fixture: the minimal coordinator matching clean/worker.py."""
+
+import pickle
+
+from repro.launch.runtime import net, wire
+
+
+def run(node, P, iters, history):
+    addrs = {}
+    for _ in range(P):
+        frm = node.recv(net.LISTEN, timeout=5.0)
+        addrs[frm.src] = pickle.loads(frm.payload)
+    for r in range(P):
+        node.send(r, net.SESSION, payload=pickle.dumps(
+            {"procs": P, "iters": iters, "history": history,
+             "addrs": addrs}))
+    for r in range(P):
+        node.recv(net.READY, src=r)
+    for r in range(P):
+        node.send(r, net.START)
+    for t in range(iters):
+        rows = [node.recv(net.OPEN, src=r, step=t, tag=net.TAG_TRUNC).payload
+                for r in range(P)]
+        opened = wire.pack_array(rows)
+        for r in range(P):
+            node.send(r, net.OPENED, step=t, tag=net.TAG_TRUNC,
+                      payload=opened, phase="trunc_open")
+        if history:
+            for r in range(P):
+                node.recv(net.OPEN, src=r, step=t, tag=net.TAG_HIST)
+    results = {}
+    for r in range(P):
+        results[r] = pickle.loads(node.recv(net.RESULT, src=r).payload)
+        node.send(r, net.BYE)
+    return results

@@ -1,0 +1,51 @@
+"""commlint fixture [tobytes_enc]: ad-hoc bytes on an array round -> COM008"""
+import json
+import pickle
+import traceback
+
+from repro.launch.runtime import net, wire
+
+
+def worker_entry(rank, host, port, node):
+    try:
+        node.connect(net.COORD, host, port)
+        node.send(net.COORD, net.LISTEN, payload=pickle.dumps(
+            {"host": host, "port": port}))
+        sess = pickle.loads(node.recv(net.SESSION, src=net.COORD).payload)
+        _run(node, sess, rank)
+        node.recv(net.BYE, src=net.COORD)
+    except Exception:  # noqa: BLE001 -- report ANY failure upstream
+        node.send(net.COORD, net.ERR, payload=json.dumps(
+            {"rank": rank, "error": traceback.format_exc()}).encode("utf-8"))
+
+
+def _run(node, sess, rank):
+    P, iters = sess["procs"], sess["iters"]
+    node.send(net.COORD, net.READY)
+    node.recv(net.START, src=net.COORD)
+    w = sess["w"]
+    for t in range(iters):
+        for s in range(P):
+            if s != rank:
+                node.send(s, net.ENC, step=t,
+                          payload=w.tobytes(), phase="encode")
+        for s in range(P):
+            if s != rank:
+                node.recv(net.ENC, src=s, step=t)
+        for s in range(P):
+            if s != rank:
+                node.send(s, net.SHARE, step=t,
+                          payload=wire.share_payload(w), phase="exchange")
+        got = 0
+        while got < P - 1:
+            frm = node.recv_any(net.SHARE, t, timeout=0.01)
+            if frm is not None:
+                got += 1
+        node.send(net.COORD, net.OPEN, step=t, tag=net.TAG_TRUNC,
+                  payload=wire.share_payload(w), phase="trunc_open")
+        node.recv(net.OPENED, src=net.COORD, step=t, tag=net.TAG_TRUNC)
+        if sess["history"]:
+            node.send(net.COORD, net.OPEN, step=t, tag=net.TAG_HIST,
+                      payload=wire.share_payload(w), phase="open_model")
+    node.send(net.COORD, net.RESULT, payload=pickle.dumps(
+        {"w": wire.share_payload(w)}), phase="open_model")

@@ -1,0 +1,270 @@
+"""commlint conformance: fixture corpus, self-run gate, corruption drills.
+
+Mirrors tests/test_analysis.py's three layers for the comm pass family:
+
+* fixture corpus (tests/fixtures/commlint/): one minimal worker+session
+  choreography per failure mode, each firing EXACTLY the designed COM
+  rule set (and the `clean` pair firing nothing);
+* the live gate: `repro.analysis --pass comm` over src/repro must be
+  clean with zero waivers and finish inside the CI fast-lane budget;
+* corruption drills: deleting the real worker's OPENED recv must flip
+  the CLI to COM001+COM005 (deadlock), and pinning the coordinator's
+  OPENED step expression must flip it to COM004 -- while an unmodified
+  copy stays clean.
+
+Plus the comm-budget layer: the declarative choreography's closed-form
+frame counts must equal core/cost_model.proc_net_frames for every
+(procs, iters, history) combination, and a diverging cost model must
+surface as COM009.
+"""
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+import pytest
+
+from repro.analysis import analyze_paths
+from repro.analysis import choreography
+from repro.analysis.cache import FindingsCache
+from repro.core import cost_model
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_REPRO = os.path.join(REPO, "src", "repro")
+RUNTIME = os.path.join(SRC_REPRO, "launch", "runtime")
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "commlint")
+
+
+def _active_rules(result):
+    return sorted({f.rule for f in result.active})
+
+
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+
+
+# ------------------------------------------------------------- fixture corpus
+
+CORPUS = [
+    ("clean", []),
+    ("drop_opened_recv", ["COM001", "COM005"]),  # orphan send -> deadlock
+    ("drop_open_send", ["COM002", "COM005"]),    # unfulfillable recv
+    ("inverted_enc", ["COM005"]),                # recv-before-send cycle
+    ("step_const", ["COM004"]),                  # send pins step=0
+    ("phase_wrong", ["COM004"]),                 # OPEN billed to "encode"
+    ("adaptive_block", ["COM006"]),              # blocking collect loop
+    ("recv_any_no_timeout", ["COM006"]),
+    ("unknown_kind", ["COM007"]),                # net.PING not in the spec
+    ("pickle_enc", ["COM008"]),                  # pickle on a data round
+    ("tobytes_enc", ["COM008"]),                 # raw bytes on an array round
+    ("card_single_enc", ["COM003"]),             # one send where P-1 expected
+]
+
+
+@pytest.mark.parametrize("case,expected", CORPUS, ids=[c[0] for c in CORPUS])
+def test_fixture_corpus(case, expected):
+    res = analyze_paths([os.path.join(FIXTURES, case)], passes=("comm",))
+    assert _active_rules(res) == expected
+
+
+def test_sec_pass_ignores_comm_fixtures():
+    """Pass selection is real: the sec family alone must not fire on a
+    choreography bug (and vice versa the corpus above runs comm-only)."""
+    res = analyze_paths([os.path.join(FIXTURES, "step_const")],
+                        passes=("sec",))
+    assert _active_rules(res) == []
+
+
+def test_waiver_covers_comm_findings(tmp_path):
+    """A seclint-grammar pragma waives COM findings too -- both COM004s
+    anchored at step_const's SHARE send line go quiet, with reasons."""
+    case = tmp_path / "waived"
+    shutil.copytree(os.path.join(FIXTURES, "step_const"), case)
+    worker = case / "worker.py"
+    src = worker.read_text()
+    target = "                node.send(s, net.SHARE, step=0,"
+    assert target in src
+    src = src.replace(
+        target,
+        "                # seclint: allow[COM004] reason=fixture pins step\n"
+        + target)
+    worker.write_text(src)
+    res = analyze_paths([str(case)], passes=("comm",))
+    assert res.active == []
+    assert len(res.waived) == 2
+    assert all(f.rule == "COM004" and f.waiver_reason for f in res.waived)
+    assert res.unused_waivers == []
+
+
+# ------------------------------------------------------------- the live gate
+
+def test_self_run_comm_clean_zero_waivers():
+    t0 = time.monotonic()
+    res = analyze_paths([SRC_REPRO], package="repro", passes=("comm",))
+    elapsed = time.monotonic() - t0
+    assert res.active == [], [str(f) for f in res.active]
+    assert res.waived == []          # acceptance: clean with ZERO waivers
+    assert elapsed < 30.0
+
+
+def test_cli_pass_selection_and_rule_listing():
+    p = _run_cli("--pass", "comm", os.path.join(FIXTURES, "clean"))
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "analysis[comm]" in p.stdout
+
+    p = _run_cli("--pass", "comm", os.path.join(FIXTURES, "pickle_enc"))
+    assert p.returncode == 1
+    assert "COM008" in p.stdout
+
+    p = _run_cli("--pass", "sec", os.path.join(FIXTURES, "pickle_enc"))
+    assert p.returncode == 0       # comm bug invisible to the sec family
+
+    p = _run_cli("--list-rules")
+    assert p.returncode == 0
+    for rid in [f"COM00{i}" for i in range(1, 10)]:
+        assert rid in p.stdout
+
+
+def test_cli_changed_only_smoke():
+    """--changed-only must run (restricting to git-dirty files) and stay
+    clean regardless of what is currently dirty."""
+    p = _run_cli("--changed-only", SRC_REPRO)
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+# --------------------------------------------------------- corruption drills
+
+def _runtime_copy(tmp, mutate=None):
+    """Copy the real worker.py+session.py (+deps) into tmp, optionally
+    mutated, and return the directory to lint."""
+    d = os.path.join(tmp, "runtime")
+    os.mkdir(d)
+    for name in ("worker.py", "session.py", "net.py"):
+        shutil.copy(os.path.join(RUNTIME, name), os.path.join(d, name))
+    if mutate:
+        path = os.path.join(d, mutate[0])
+        with open(path) as fh:
+            src = fh.read()
+        assert mutate[1] in src, f"drill anchor not found in {mutate[0]}"
+        with open(path, "w") as fh:
+            fh.write(src.replace(mutate[1], mutate[2]))
+    return d
+
+
+_WORKER_OPENED_RECV = (
+    "            frm = node.recv(net.OPENED, src=net.COORD, step=step,\n"
+    "                            tag=net.TAG_TRUNC)")
+
+
+def test_drill_deleted_recv_is_a_deadlock():
+    """Deleting the worker's OPENED recv orphans the coordinator's
+    broadcast AND removes a barrier leg -> COM001 + COM005."""
+    with tempfile.TemporaryDirectory() as tmp:
+        d = _runtime_copy(tmp, mutate=(
+            "worker.py", _WORKER_OPENED_RECV, "            frm = None"))
+        p = _run_cli("--pass", "comm", d)
+        assert p.returncode == 1
+        assert "COM001" in p.stdout and "COM005" in p.stdout
+
+
+def test_drill_mutated_step_expr_is_a_pair_mismatch():
+    with tempfile.TemporaryDirectory() as tmp:
+        d = _runtime_copy(tmp, mutate=(
+            "session.py",
+            "node.send(r, net.OPENED, step=t, tag=net.TAG_TRUNC,",
+            "node.send(r, net.OPENED, step=0, tag=net.TAG_TRUNC,"))
+        p = _run_cli("--pass", "comm", d)
+        assert p.returncode == 1
+        assert "COM004" in p.stdout
+
+
+def test_uncorrupted_runtime_copy_is_clean():
+    with tempfile.TemporaryDirectory() as tmp:
+        d = _runtime_copy(tmp)
+        p = _run_cli("--pass", "comm", d)
+        assert p.returncode == 0, p.stdout + p.stderr
+
+
+# ------------------------------------------------------------ the comm budget
+
+def test_choreography_matches_cost_model_closed_forms():
+    for procs in (1, 2, 3, 4, 8):
+        for iters in (0, 1, 2, 10):
+            for history in (False, True):
+                spec = choreography.frames_by_phase(procs, iters, history)
+                model = cost_model.proc_net_frames(procs, iters,
+                                                   history=history)
+                assert spec == model, (procs, iters, history)
+
+
+def test_frame_closed_forms_spot_values():
+    got = choreography.frames_by_phase(4, 10, history=True)
+    assert got == {
+        "setup": 4 * 3 // 2 + 6 * 4,       # P(P-1)/2 HELLOs + 6P control
+        "encode": 4 * 3 * 10,              # P(P-1) per step
+        "exchange": 4 * 3 * 10,
+        "trunc_open": 2 * 4 * 10,          # OPEN up + OPENED down
+        "open_model": 4 * 10 + 4,          # hist OPENs + P RESULTs
+    }
+    # zero-valued phases are omitted, not reported as 0
+    assert "open_model" in choreography.frames_by_phase(2, 0, history=False)
+    assert choreography.frames_by_phase(2, 0)["open_model"] == 2
+
+
+def test_diverging_cost_model_is_com009(monkeypatch):
+    def wrong(procs, iters, history=False):
+        good = dict(choreography.frames_by_phase(procs, iters, history))
+        good["encode"] = good.get("encode", 0) + 1
+        return good
+    monkeypatch.setattr(cost_model, "proc_net_frames", wrong)
+    res = analyze_paths([RUNTIME], passes=("comm",))
+    assert "COM009" in _active_rules(res)
+
+
+def test_missing_cost_model_hook_is_com009(monkeypatch):
+    monkeypatch.delattr(cost_model, "proc_net_frames")
+    res = analyze_paths([RUNTIME], passes=("comm",))
+    assert "COM009" in _active_rules(res)
+
+
+# -------------------------------------------------- cache + scoped runs
+
+def test_findings_cache_hit_miss_invalidate(tmp_path):
+    bad = os.path.join(REPO, "tests", "fixtures", "seclint", "sec001_bad.py")
+    target = tmp_path / "sec001_bad.py"
+    shutil.copy(bad, target)
+    cpath = str(tmp_path / "cache.json")
+
+    cache = FindingsCache(cpath)
+    res = analyze_paths([str(target)], cache=cache)
+    assert _active_rules(res) == ["SEC001"]
+    assert cache.misses >= 1 and cache.hits == 0
+    cache.save()
+
+    cache2 = FindingsCache(cpath)          # fresh load from disk
+    res = analyze_paths([str(target)], cache=cache2)
+    assert _active_rules(res) == ["SEC001"]  # findings survive the cache
+    assert cache2.hits >= 1 and cache2.misses == 0
+
+    st = os.stat(target)
+    os.utime(target, ns=(st.st_atime_ns, st.st_mtime_ns + 1_000_000))
+    cache3 = FindingsCache(cpath)
+    analyze_paths([str(target)], cache=cache3)
+    assert cache3.misses >= 1               # mtime change invalidates
+
+
+def test_only_files_restricts_but_keeps_the_group():
+    """Scoping the run to worker.py alone must still lint it against its
+    session.py counterpart (groups are discovered from the full index)."""
+    worker = os.path.abspath(os.path.join(RUNTIME, "worker.py"))
+    res = analyze_paths([SRC_REPRO], package="repro", passes=("comm",),
+                        only_files={worker})
+    assert res.active == []
+    assert res.files == [worker]

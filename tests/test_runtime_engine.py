@@ -20,6 +20,7 @@ import numpy as np
 import pytest
 
 from repro import api
+from repro.analysis import choreography
 from repro.api import engine as engine_mod
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -61,6 +62,11 @@ def test_proc_engine_matches_jit_golden():
     assert MEASURED_PHASES - {"setup"} <= set(mc["seconds_by_phase"])
     assert mc["wall_s"] > 0 and mc["setup_wall_s"] > 0
     assert mc["degraded_steps"] == 0          # loopback, no injected delay
+    # sent-frame counts are deterministic: they must equal the static
+    # choreography budget bit for bit (commlint's COM009 closed forms)
+    assert mc["frames_by_phase"] == choreography.frames_by_phase(
+        4, 10, history=True)
+    assert mc["dropped_frames"] == {}         # nothing stale on loopback
     assert "measured" in res.summary()
 
 
@@ -74,7 +80,14 @@ def test_proc_straggler_emerges_and_stays_bit_exact():
     res = api.fit("smoke_straggler", "copml",
                   api.EngineSpec("proc", devices=4, net=net_cfg),
                   key=0, subset="all", history=False)
-    assert res.measured_comm["degraded_steps"] >= 1
+    mc = res.measured_comm
+    assert mc["degraded_steps"] >= 1
+    # degradation drops frames at the receiver but every frame was still
+    # sent: the sent-side budget stays exact while dropped_frames records
+    # the stale discards.
+    assert mc["frames_by_phase"] == choreography.frames_by_phase(
+        mc["procs"], mc["iters"], history=False)
+    assert sum(mc["dropped_frames"].values()) >= 1
     np.testing.assert_array_equal(np.asarray(res.weights),
                                   np.asarray(ref.weights))
     np.testing.assert_array_equal(np.asarray(res.state.w_shares),

@@ -8,6 +8,8 @@ per-link ordering guarantee of a live two-Node socket session under
 injected latency.
 """
 
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -209,6 +211,51 @@ def test_stale_step_frames_are_dropped():
         assert got.payload == b"fresh"
         with pytest.raises(net.NodeTimeout):
             a.recv(net.SHARE, src=1, step=2, timeout=0.05, retries=1)
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_dropped_frames_counted_receiver_side():
+    """Every stale-step frame discarded by recv shows up in the
+    receiver's `dropped_frames` (keyed by kind name), while the sender's
+    per-phase sent counters are untouched -- so the static frame budget
+    stays exact on degraded runs."""
+    cfg = NetConfig(recv_timeout_s=0.2, recv_retries=1)
+    a = net.Node(0, cfg=cfg).start()
+    b = net.Node(1, cfg=cfg).start(listen=False)
+    try:
+        b.connect(0, cfg.host, a.port)
+        b.send(0, net.SHARE, step=0, payload=b"late0", phase="exchange")
+        b.send(0, net.SHARE, step=1, payload=b"late1", phase="exchange")
+        b.send(0, net.SHARE, step=2, payload=b"fresh", phase="exchange")
+        got = a.recv(net.SHARE, src=1, step=2, timeout=5.0)
+        assert got.payload == b"fresh"
+        assert a.dropped_frames == {"SHARE": 2}
+        assert a.stats()["dropped"] == {"SHARE": 2}
+        # drops are a receiver-side observation only
+        assert b.dropped_frames == {}
+        assert b.sent_frames["exchange"] == 3  # dropped frames still sent
+    finally:
+        a.stop()
+        b.stop()
+
+
+def test_recv_any_counts_stale_drops():
+    """recv_any's stale purge increments the same drop counter."""
+    cfg = NetConfig(recv_timeout_s=0.2, recv_retries=1)
+    a = net.Node(0, cfg=cfg).start()
+    b = net.Node(1, cfg=cfg).start(listen=False)
+    try:
+        b.connect(0, cfg.host, a.port)
+        b.send(0, net.SHARE, step=0, payload=b"old")
+        b.send(0, net.SHARE, step=3, payload=b"new")
+        deadline = time.monotonic() + 5.0
+        frm = None
+        while frm is None and time.monotonic() < deadline:
+            frm = a.recv_any(net.SHARE, 3, timeout=0.05)
+        assert frm is not None and frm.payload == b"new"
+        assert a.dropped_frames == {"SHARE": 1}
     finally:
         a.stop()
         b.stop()

@@ -47,7 +47,7 @@ def build_stages() -> dict:
     from . import (analysis_bench, distributed_bench, fig3_speedup,
                    fig4_accuracy, kernel_micro, multiclass_bench,
                    procnet_bench, resilience_bench, roofline_report,
-                   table1_breakdown, table2_complexity)
+                   serving_bench, table1_breakdown, table2_complexity)
 
     def kernel(report, ctx):
         ctx["field_macs_per_s"] = kernel_micro.run(report)
@@ -78,6 +78,10 @@ def build_stages() -> dict:
               lambda report, ctx: multiclass_bench.run(report),
               ("mnist10_like", "copml", "jit"),
               "encode-once C-class training vs C sequential binary fits"),
+        Stage("serving",
+              lambda report, ctx: serving_bench.run(report),
+              ("smoke", "copml", "jit"),
+              "secure serving: queries/sec vs micro-batch size per engine"),
         Stage("fig4", lambda report, ctx: fig4_accuracy.run(report),
               ("fig4", "copml", "jit"),
               "accuracy parity vs plaintext (paper Fig. 4)"),

@@ -1,0 +1,78 @@
+"""Serving stage: queries/sec through the secure serving path.
+
+The serving subsystem's claim is ENCODE ONCE, SERVE MANY: `api.serve`
+pays one reshare of the trained model into per-client serving shares,
+then every micro-batch window is a single packed field GEMM + logit
+reconstruction.  This stage measures the two consequences:
+
+* throughput grows with the micro-batch size -- the per-window dispatch
+  overhead (queue drain, quantize, GEMM launch, reconstruct) amortizes
+  over more queries, so q/s at batch 128 must beat q/s at batch 1 on
+  every engine;
+* the jit engine's single compiled dispatch per window beats eager's
+  op-by-op path once batches are large enough for the window cost to be
+  dominated by dispatch count (acceptance: jit >= eager at batch >= 32);
+* the one-time encode cost is reported with its per-query amortization
+  as a derived row -- the number that goes to zero as the server lives.
+
+Timings are warm best-of-reps around `SecureServer.serve` on a fixed
+query stream (the smoke eval rows, tiled), so compile time and the
+encode itself stay out of the throughput rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+ITERS = 4
+REPS = 3
+N_QUERIES = 256
+BATCHES = (1, 8, 32, 128)
+ENGINES = ("eager", "jit", "sharded:1")
+_WL = "smoke"
+
+
+def run(report) -> None:
+    import numpy as np
+
+    from repro import api
+
+    res = api.fit(_WL, "copml", "jit", key=0, iters=ITERS, history=False)
+    x, _ = api.get_workload(_WL).eval_set()
+    rows = np.asarray(x, np.float32)
+    queries = np.tile(rows, (-(-N_QUERIES // len(rows)), 1))[:N_QUERIES]
+
+    qps: dict = {}
+    encode_s = None
+    for engine in ENGINES:
+        for bsz in BATCHES:
+            # window_ms is effectively infinite: every window flushes on
+            # count, so the batch axis is exactly the dispatch-size axis
+            srv = api.serve(_WL, res, engine, batch_size=bsz,
+                            window_ms=1e9)
+            encode_s = srv.stats["encode_s"]
+            srv.serve(queries[:bsz])            # compile + warm this shape
+            best = float("inf")
+            for _ in range(REPS):
+                t0 = time.perf_counter()
+                srv.serve(queries)
+                best = min(best, time.perf_counter() - t0)
+            qps[engine, bsz] = N_QUERIES / best
+            report(f"serving/{engine}/batch{bsz}",
+                   best / N_QUERIES * 1e6,
+                   f"{qps[engine, bsz]:.0f}q/s", engine=engine)
+
+    # ------------------------------------------------- derived rows
+    # encode-once amortization: the reshare cost per query after serving
+    # the whole stream once (ungated -- us_per_call 0.0 like other ratios)
+    report("serving/encode_once_s", encode_s * 1e6,
+           f"amortized_{encode_s / N_QUERIES * 1e6:.1f}us/q_over_"
+           f"{N_QUERIES}q")
+    for engine in ENGINES:
+        report(f"serving/{engine}/batch_scaling", 0.0,
+               f"{qps[engine, BATCHES[-1]] / qps[engine, BATCHES[0]]:.2f}"
+               f"x_batch{BATCHES[-1]}_vs_batch{BATCHES[0]}",
+               engine=engine)
+    for bsz in (32, 128):
+        report(f"serving/jit_vs_eager_batch{bsz}", 0.0,
+               f"{qps['jit', bsz] / qps['eager', bsz]:.2f}x")

@@ -11,7 +11,8 @@ Checks (run standalone or via tests/test_docs.py in the fast pytest lane):
 4. docs/API.md covers the live repro.api registries: every registered
    protocol, engine, workload, and objective name and every TrainResult
    field must appear there (imports the package, so a stale doc fails the
-   lint);
+   lint), plus the serving surface (api.serve / SERVE_ENGINES /
+   SecureServer fields and the open_logits sink);
 5. docs/ANALYSIS.md covers the live analyzer rule registry: every rule
    ID in repro.analysis.RULES (seclint's SEC/FLD/WVR and commlint's COM
    families) must appear in the catalog;
@@ -141,6 +142,47 @@ def check_api() -> list:
     return problems
 
 
+def check_serve() -> list:
+    """docs/API.md must document the LIVE serving surface: the api names,
+    the engine kinds, and every SecureServer dataclass field."""
+    path = os.path.join(ROOT, "docs", "API.md")
+    if not os.path.exists(path):
+        return ["missing docs/API.md (the repro.api reference)"]
+    with open(path) as f:
+        text = f.read()
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        import dataclasses
+
+        from repro import api
+        from repro.serve.server import SecureServer
+    except Exception as e:  # noqa: BLE001 -- an unimportable serve IS a finding
+        return [f"repro.serve failed to import for the docs lint: {e!r}"]
+    problems = []
+    names = (
+        [("serve name", n)
+         for n in ("serve", "SERVE_ENGINES", "SecureServer",
+                   "MicroBatchQueue", "CodedModel", "open_logits",
+                   "repro-serve")]
+        + [("serve engine kind", n) for n in api.SERVE_ENGINES]
+        + [("SecureServer field", f.name)
+           for f in dataclasses.fields(SecureServer)])
+    for kind, name in names:
+        if f"`{name}`" not in text:
+            problems.append(f"docs/API.md: {kind} `{name}` is live but "
+                            f"undocumented")
+    # the sanctioned sink must also be named in the ARCHITECTURE opening list
+    arch = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+    with open(arch) as f:
+        if "open_logits" not in f.read():
+            problems.append("docs/ARCHITECTURE.md: serving sink "
+                            "`open_logits` missing from the sanctioned "
+                            "opening list")
+    return problems
+
+
 def check_analysis() -> list:
     """docs/ANALYSIS.md must document every LIVE seclint rule ID."""
     path = os.path.join(ROOT, "docs", "ANALYSIS.md")
@@ -198,7 +240,8 @@ def main() -> int:
         with open(path) as f:
             doc_text += f.read()
     problems = (check_packages(doc_text) + check_links() + check_commands()
-                + check_api() + check_analysis() + check_wire_kinds())
+                + check_api() + check_serve() + check_analysis()
+                + check_wire_kinds())
     for p in problems:
         print(p)
     if not problems:

@@ -133,6 +133,16 @@ EFFECTS = {
     "repro.core.quantize.signed_value": {"kind": "dequant"},
     "repro.core.quantize.*": {"kind": "propagate"},
 
+    # --- secure serving -----------------------------------------------------
+    # open_logits is the serving path's ONLY sanctioned sink: it
+    # reconstructs per-query logits (a (B, C') public output), never
+    # anything model-shaped.  Everything else in serve/ stays in the
+    # share domain and merely propagates taint.
+    "repro.serve.coded.open_logits": {"kind": "open"},
+    "repro.serve.coded.serving_points": {"kind": "public"},
+    "repro.serve.coded.reference_scores": {"kind": "public"},
+    "repro.serve.*": {"kind": "propagate"},
+
     # --- multi-process runtime ---------------------------------------------
     # share_payload is THE sanctioned cross-process sink: the runtime's
     # equivalent of `-> Opened` for sends.  Its output is an opaque wire

@@ -1,11 +1,12 @@
 """Analysis scope: which files under the tree seclint actually checks.
 
 The seed repo carries dormant LM-era modules (`models/`, most of
-`configs/`, `serve/serving.py`) that predate the COPML protocol work and
-never touch shares or field arrays.  They are excluded here explicitly --
-out-of-protocol legacy code, documented in docs/ANALYSIS.md -- so the
-gate's signal stays about the MPC hot path.  Everything else under
-src/repro is in scope.
+`configs/`) that predate the COPML protocol work and never touch shares
+or field arrays.  They are excluded here explicitly -- out-of-protocol
+legacy code, documented in docs/ANALYSIS.md -- so the gate's signal
+stays about the MPC hot path.  Everything else under src/repro is in
+scope; in particular the secure-serving package `serve/` (which holds
+live model shares) is fully analyzed.
 """
 
 from __future__ import annotations
@@ -16,7 +17,6 @@ import os
 #: analysis.  Directories end with "/".
 EXCLUDED = (
     "models/",
-    "serve/serving.py",
 )
 
 #: configs/ is excluded except the protocol-era entries

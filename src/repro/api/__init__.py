@@ -20,6 +20,10 @@ every protocol consumes:
     res = api.fit("mnist10_like", "copml", "jit")     # 10-class, coded
     res.per_class_accuracy                            # (10,)
 
+Trained models serve without being opened: `api.serve(workload, res,
+engine)` re-shares the result's protocol-native share state into a
+SecureServer (micro-batched coded inference, see docs/API.md Serving).
+
 New protocols, workloads, objectives, and engines plug in via the
 registries (api.register_protocol / api.register_workload /
 api.register_objective) without another bespoke driver -- see docs/API.md
@@ -42,18 +46,20 @@ from .protocols import PROTOCOLS, Protocol, fit, run_copml_engine
 from .protocols import names as protocol_names
 from .protocols import register as register_protocol
 from .result import TrainResult, accuracy_curve, accuracy_of
+from .serving import SERVE_ENGINES, serve
 from .workloads import WORKLOADS, Workload
 from .workloads import get as get_workload
 from .workloads import names as workload_names
 from .workloads import register as register_workload
 
 __all__ = [
-    "EAGER", "ENGINES", "JIT", "OBJECTIVES", "PROC", "PROTOCOLS", "SHARDED",
-    "EngineKind", "EngineSpec", "FaultPlan", "FaultPlanViolation",
-    "NetConfig", "Protocol", "SecureObjective", "TrainResult", "WORKLOADS",
-    "Workload", "accuracy_curve", "accuracy_of", "engine_names", "fit",
-    "get_objective", "get_workload", "multiclass_logistic",
-    "objective_names", "parse_engine", "protocol_names",
-    "register_engine_kind", "register_objective", "register_protocol",
-    "register_workload", "run_copml_engine", "workload_names",
+    "EAGER", "ENGINES", "JIT", "OBJECTIVES", "PROC", "PROTOCOLS",
+    "SERVE_ENGINES", "SHARDED", "EngineKind", "EngineSpec", "FaultPlan",
+    "FaultPlanViolation", "NetConfig", "Protocol", "SecureObjective",
+    "TrainResult", "WORKLOADS", "Workload", "accuracy_curve", "accuracy_of",
+    "engine_names", "fit", "get_objective", "get_workload",
+    "multiclass_logistic", "objective_names", "parse_engine",
+    "protocol_names", "register_engine_kind", "register_objective",
+    "register_protocol", "register_workload", "run_copml_engine", "serve",
+    "workload_names",
 ]

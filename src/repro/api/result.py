@@ -30,9 +30,23 @@ def accuracy_of(w, x, y) -> float:
     return float(((sigmoid(z) > 0.5) == np.asarray(y)).mean())
 
 
-def accuracy_curve(history, x, y) -> np.ndarray:
-    """Per-iteration accuracy of the opened model trajectory."""
-    return np.asarray([accuracy_of(w, x, y) for w in np.asarray(history)])
+def accuracy_curve(history, x, y, objective=None) -> np.ndarray:
+    """Per-iteration score of the opened model trajectory.
+
+    With `objective` (a core/objectives.SecureObjective) each step is
+    scored by `objective.score`, so matrix-model histories work.  Without
+    one, only vector-model histories (iters, d) are accepted -- a matrix
+    history raises the same named ValueError as `accuracy_of`, but BEFORE
+    the loop instead of mid-iteration."""
+    hist = np.asarray(history)
+    if objective is not None:
+        return np.asarray([objective.score(w, x, y) for w in hist])
+    if hist.ndim != 2:
+        raise ValueError(
+            f"accuracy_of scores (d,) vector models; got shape "
+            f"{hist.shape[1:]} -- score matrix models with "
+            f"workload.objective.score(w, x, y) or pass objective= here")
+    return np.asarray([accuracy_of(w, x, y) for w in hist])
 
 
 @dataclasses.dataclass

@@ -1,0 +1,70 @@
+"""api.serve: the serving front door, mirroring api.fit's three axes.
+
+    from repro import api
+    res = api.fit("mnist10_like", "copml", "jit")
+    srv = api.serve("mnist10_like", res, "jit")
+    preds, stats = srv.serve(queries)          # micro-batched, in order
+
+The (workload, result, engine) triple fully specifies a server: the
+workload supplies the protocol parameterization (cfg: N/T/scales) and
+the objective (decision semantics), the TrainResult supplies the model
+-- preferably its protocol-native share state, so the model is re-shared
+without ever being opened -- and the engine picks eager / jit / sharded
+execution exactly as in fit().  proc:N serving is future work; the
+per-client share layout (CodedModel.w_stack rows) already matches the
+runtime's one-row-per-process convention, so nothing here precludes it.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..serve import coded
+from ..serve.server import SERVE_KINDS, SecureServer
+from . import engine as engine_mod
+from . import workloads as workloads_mod
+
+#: engine kinds api.serve accepts today (see SERVE_KINDS in serve/server)
+SERVE_ENGINES = SERVE_KINDS
+
+
+def serve(workload, result, engine="jit", *, key: int = 0,
+          batch_size: int = 32, window_ms: float = 5.0) -> SecureServer:
+    """Build a SecureServer from a workload and its TrainResult.
+
+    workload    registry name or Workload instance (must be the one the
+                result was trained on -- shape-checked)
+    result      an api.fit TrainResult; a COPML result's share state is
+                re-shared directly (encode path never opens the model)
+    engine      "eager" | "jit" | "sharded[:N]" (spec string, EngineSpec,
+                or a jax Mesh); "proc" is rejected as future work
+    key         PRNG seed of the one-time re-share randomness
+    batch_size  micro-batch window size (queries per scoring dispatch)
+    window_ms   max milliseconds a query waits for its window to fill
+    """
+    wl = workloads_mod.resolve(workload)
+    spec = engine_mod.parse(engine)
+    if spec.kind not in SERVE_ENGINES:
+        raise ValueError(
+            f"engine kind {spec.kind!r} cannot serve yet (supported: "
+            f"{SERVE_ENGINES}); proc:N serving is future work -- the "
+            f"per-client share layout already matches the runtime's "
+            f"one-row-per-process convention")
+    w = np.asarray(result.weights)
+    if w.shape != wl.w_shape:
+        raise ValueError(
+            f"result.weights shape {w.shape} does not match workload "
+            f"{wl.name!r} model shape {wl.w_shape} -- was this result "
+            f"trained on a different workload?")
+    rwl = getattr(result, "workload", wl.name)
+    if rwl != wl.name:
+        raise ValueError(
+            f"result was trained on workload {rwl!r}, not {wl.name!r}")
+    model = coded.encode_model(jax.random.PRNGKey(key), result, wl.cfg,
+                               wl.objective)
+    mesh = spec.resolve_mesh() if spec.kind == "sharded" else None
+    return SecureServer(workload=wl.name, protocol=result.protocol,
+                        engine=spec.label, kind=spec.kind,
+                        batch_size=batch_size, window_ms=window_ms,
+                        model=model, objective=wl.objective, mesh=mesh)

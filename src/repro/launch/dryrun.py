@@ -72,7 +72,7 @@ def _step_fn_and_args(cfg, shape, mesh, *, loss_chunk=None, microbatch=None,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir=None,
              **tuning) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     if arch == "copml-logreg":
@@ -122,7 +122,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir=None,
               f"dominant={rf.dominant} "
               f"useful_ratio={rf.useful_flops_ratio:.3f} "
               f"roofline_frac={rf.roofline_fraction:.3f}")
-    rec["compile_s"] = time.time() - t0
+    rec["compile_s"] = time.perf_counter() - t0
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         tag = f"{arch}_{shape_name}_{'multipod' if multi_pod else 'pod'}"

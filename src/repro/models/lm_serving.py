@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import model_zoo as MZ
-from ..models.config import ModelConfig
+from . import model_zoo as MZ
+from .config import ModelConfig
 
 
 @dataclasses.dataclass
@@ -51,16 +51,16 @@ def generate(cfg: ModelConfig, params, prompts, scfg: ServeConfig,
     batch = {"tokens": prompts}
     if frontier is not None:
         batch["frontier"] = frontier
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, pcaches = jax.jit(bm.prefill_step)(params, batch)
     caches = MZ.init_cache(cfg, b, scfg.cache_len)
     caches = _copy_prefill_into_cache(cfg, pcaches, caches, s0)
-    prefill_s = time.time() - t0
+    prefill_s = time.perf_counter() - t0
 
     decode = jax.jit(bm.decode_step)
     key = jax.random.PRNGKey(scfg.seed)
     tokens = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     # vlm: the cache already contains n_patches prefix positions
     pos0 = s0 + (cfg.n_patches if cfg.family == "vlm" else 0)
     for i in range(scfg.max_new_tokens - 1):
@@ -74,7 +74,7 @@ def generate(cfg: ModelConfig, params, prompts, scfg: ServeConfig,
             nxt = jax.random.categorical(sub, lg / scfg.temperature)
         tokens.append(nxt.astype(jnp.int32))
     new = jnp.stack(tokens, axis=1)
-    decode_s = time.time() - t0
+    decode_s = time.perf_counter() - t0
     stats = {"prefill_s": prefill_s, "decode_s": decode_s,
              "tokens_per_s": b * (scfg.max_new_tokens - 1) /
              max(decode_s, 1e-9)}

@@ -1,0 +1,15 @@
+"""repro.serve -- the secure serving subsystem.
+
+Encode-once coded inference on a secret-shared model: `coded` holds the
+share-domain math (encode, packed scoring GEMM, the `open_logits`
+declassify sink, the quantized reference scorer), `queue` the
+micro-batch window, `server` the SecureServer endpoint.  The front door
+is `repro.api.serve(workload, result, engine)`.
+"""
+
+from .coded import CodedModel, encode_model, open_logits, reference_scores
+from .queue import MicroBatchQueue
+from .server import SERVE_KINDS, SecureServer
+
+__all__ = ["CodedModel", "MicroBatchQueue", "SERVE_KINDS", "SecureServer",
+           "encode_model", "open_logits", "reference_scores"]

@@ -83,14 +83,14 @@ def train(cfg: ModelConfig, tcfg: TrainConfig, mesh=None, callback=None):
     with ctx:
         for step in range(start_step, tcfg.steps):
             batch = pipeline.lm_batch(dcfg, step)
-            t0 = time.time()
+            t0 = time.perf_counter()
             params, opt_state, metrics = jit_step(
                 params, opt_state, batch, jnp.asarray(step, jnp.int32))
             if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
                 loss = float(metrics["loss"])
                 rec = {"step": step, "loss": loss,
                        "grad_norm": float(metrics["grad_norm"]),
-                       "step_time_s": time.time() - t0}
+                       "step_time_s": time.perf_counter() - t0}
                 history.append(rec)
                 print(f"step {step:5d} loss {loss:8.4f} "
                       f"gnorm {rec['grad_norm']:8.3f} "

@@ -1,0 +1,16 @@
+"""SEC001: a serving-side model share is serialized raw.
+
+The encode-once serving artifact is a stack of Shamir shares of the
+model; `.tobytes()` materializes a share on the host for an ad-hoc
+response payload.  The serving path's only sanctioned declassification
+is `repro.serve.coded.open_logits` on per-query scores -- model-shaped
+values must never leave the share domain (see servesend_good.py).
+"""
+from repro.core import shamir
+from repro.kernels import ops as kernel_ops
+
+
+def respond_with_model_blob(key, wq, xq, pts):
+    shares = shamir.share(key, wq, 1, 4, pts)     # (N, d) model shares
+    scores = kernel_ops.modmatmul(xq, shares[0][:, None])
+    return shares[0].tobytes(), scores

@@ -1,0 +1,24 @@
+"""SEC001 no-fire: the serving path opens per-query logits ONLY.
+
+`repro.serve.coded.open_logits` is registered as an `open` effect in
+analysis/registry.py: reconstructing any T+1 per-client score shares
+yields the public (B, C') logits, and nothing model-shaped ever leaves
+the share domain.  The dequantized logits may then touch the host.
+"""
+import numpy as np
+
+from repro.core import quantize, shamir
+from repro.serve import coded
+
+
+def respond_with_logits(key, result, cfg, objective, queries):
+    model = coded.encode_model(key, result, cfg, objective)
+    xq = coded.quantize_queries(model, queries)
+    z_shares = coded.score_shares(model, xq)      # stays secret
+    logits = coded.open_logits(z_shares, model)   # sanctioned sink
+    return np.asarray(quantize.dequantize(logits, model.lz))
+
+
+def reshare_for_new_epoch(key, shares, pts):
+    """Degree-refresh keeps the model in the share domain end to end."""
+    return shamir.reshare(key, shares, 1, 4, pts)

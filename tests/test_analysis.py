@@ -51,6 +51,8 @@ CORPUS = [
     ("sec003_good.py", []),
     ("procsend_bad.py", ["SEC001"]),  # hand-rolled socket write of a Share
     ("procsend_good.py", []),         # via the sanctioned wire.share_payload
+    ("servesend_bad.py", ["SEC001"]),  # raw model-share bytes on the wire
+    ("servesend_good.py", []),         # only logits open (coded.open_logits)
     ("fld001_bad.py", ["FLD001"]),
     ("fld001_good.py", []),
     ("fld002_bad.py", ["FLD002"]),

@@ -350,6 +350,27 @@ def test_legacy_accuracy_of_rejects_matrix_models():
         api.accuracy_of(np.zeros((3, 10)), x, np.zeros(4))
 
 
+def test_accuracy_curve_matrix_history():
+    """Regression: a (iters, d, C) matrix-model history must fail fast
+    with the SAME named error BEFORE iterating (it used to crash on the
+    first history row inside the loop), and scoring it with the
+    workload's objective must work."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(20, 3))
+    y = rng.integers(0, 4, size=20)
+    hist = rng.normal(size=(5, 3, 4))           # (iters, d, C=4)
+    with pytest.raises(ValueError, match="objective.score"):
+        api.accuracy_curve(hist, x, y)
+    obj = api.multiclass_logistic(4)
+    curve = api.accuracy_curve(hist, x, y, objective=obj)
+    assert curve.shape == (5,)
+    assert curve[0] == obj.score(hist[0], x, y)
+    # vector histories keep working without an objective
+    yb = rng.integers(0, 2, size=20)
+    vec = api.accuracy_curve(rng.normal(size=(5, 3)), x, yb)
+    assert vec.shape == (5,) and np.all((0 <= vec) & (vec <= 1))
+
+
 def test_multiclass_faultplan_bit_exact():
     """A churned multi-class run equals the fault-free run bit for bit
     (LCC decode invariance on the matrix-model path), and adversarial

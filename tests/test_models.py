@@ -74,7 +74,7 @@ def test_prefill_then_decode_matches_full_forward(arch):
     # vlm caches hold the patch prefix too
     max_seq = s + 8 + (cfg.n_patches if cfg.family == "vlm" else 0)
     caches = MZ.init_cache(cfg, b, max_seq)
-    from repro.serve.serving import _copy_prefill_into_cache
+    from repro.models.lm_serving import _copy_prefill_into_cache
     caches = _copy_prefill_into_cache(cfg, pcache, caches, s)
     pos0 = s + (cfg.n_patches if cfg.family == "vlm" else 0)
     dec_logits, _ = jax.jit(bm.decode_step)(

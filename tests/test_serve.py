@@ -1,0 +1,245 @@
+"""Secure serving conformance: field-exactness, queue properties, API.
+
+The serving contract (docs/ARCHITECTURE.md, serving data flow):
+
+* the in-field logits of the secure path equal the quantized reference
+  scorer BIT FOR BIT, on every engine (eager / jit / sharded) and both
+  model shapes ((d,) and (d, C));
+* predictions agree with opening-then-scoring within quantization
+  tolerance (the only divergence source is the lx/lw rounding);
+* the model never leaves the share domain: the CodedModel is per-client
+  shares whose any-T+1 reconstruction is the quantized model;
+* the micro-batch queue preserves submission order, flushes on window
+  expiry, and zero-pads ragged tails to the one compiled batch shape.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.core import quantize, shamir
+from repro.serve import coded
+from repro.serve.queue import MicroBatchQueue
+
+SERVE_ENGINES = ["eager", "jit", "sharded:1"]
+
+
+@pytest.fixture(scope="module")
+def smoke_result():
+    return api.fit("smoke", "copml", "jit", history=False)
+
+
+@pytest.fixture(scope="module")
+def mnist_result():
+    return api.fit("mnist10_like", "copml", "jit", iters=6, history=False)
+
+
+def _eval_queries(workload, n=24):
+    x, y = api.get_workload(workload).eval_set()
+    return np.asarray(x[:n], np.float32), np.asarray(y[:n])
+
+
+# ---------------------------------------------------- field-exact conformance
+
+@pytest.mark.parametrize("engine", SERVE_ENGINES)
+@pytest.mark.parametrize("workload,fixture", [
+    ("smoke", "smoke_result"),            # (d,) vector model
+    ("mnist10_like", "mnist_result"),     # (d, C) matrix model
+])
+def test_secure_scores_bit_exact_vs_reference(engine, workload, fixture,
+                                              request):
+    """In-field secure logits == quantized reference scorer, exactly."""
+    res = request.getfixturevalue(fixture)
+    wl = api.get_workload(workload)
+    x, _ = _eval_queries(workload, 16)
+    srv = api.serve(workload, res, engine, batch_size=8)
+    secure = srv.score_field(x)
+    ref = np.asarray(coded.reference_scores(res.weights, x, wl.cfg))
+    np.testing.assert_array_equal(secure, ref)
+    assert srv.model.from_shares        # copml state: model never opened
+
+
+def test_predictions_within_quantization_tolerance(smoke_result):
+    """Float logits differ from opening-then-scoring only by the query
+    quantization: |error| <= ||w||_1 * 2^-(lx+1)."""
+    res = smoke_result
+    wl = api.get_workload("smoke")
+    x, _ = _eval_queries("smoke", 24)
+    srv = api.serve("smoke", res, "jit", batch_size=8)
+    secure_logits = srv.logits(x)[:, 0]
+    open_logits = np.asarray(x, np.float64) @ res.weights
+    bound = np.abs(res.weights).sum() * 0.5 / (1 << wl.cfg.lx)
+    assert np.max(np.abs(secure_logits - open_logits)) <= bound + 1e-4
+
+
+def test_argmax_agreement_with_opened_model(mnist_result):
+    """Matrix-model argmax decisions match opened-model scoring on the
+    eval set (small quantization-induced disagreement allowed), and are
+    EXACTLY the quantized-reference decisions."""
+    res = mnist_result
+    wl = api.get_workload("mnist10_like")
+    x, _ = _eval_queries("mnist10_like", 64)
+    srv = api.serve("mnist10_like", res, "jit", batch_size=16)
+    preds, _ = srv.serve(x)
+    opened = np.argmax(np.asarray(x, np.float64) @ res.weights, axis=1)
+    assert (preds == opened).mean() >= 0.9
+    ref = np.asarray(coded.reference_scores(res.weights, x, wl.cfg))
+    np.testing.assert_array_equal(preds, np.argmax(
+        np.asarray(quantize.dequantize(ref, wl.cfg.lz)), axis=1))
+
+
+def test_engines_bit_exact_to_each_other(smoke_result):
+    x, _ = _eval_queries("smoke", 16)
+    outs = [api.serve("smoke", smoke_result, e, batch_size=8).score_field(x)
+            for e in SERVE_ENGINES]
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0], other)
+
+
+# ----------------------------------------------------------- the share domain
+
+def test_model_stays_secret_shared(smoke_result):
+    """The CodedModel is genuine Shamir sharing: any T+1 shares open to
+    the quantized model, and the shares lie at the protocol's serving
+    lambdas (NOT the default 1..N points)."""
+    res = smoke_result
+    wl = api.get_workload("smoke")
+    srv = api.serve("smoke", res, "jit")
+    model = srv.model
+    assert model.points == coded.serving_points(wl.cfg)
+    wq = np.asarray(quantize.quantize(
+        np.asarray(res.weights, np.float32), wl.cfg.lw))
+    opened = np.asarray(shamir.reconstruct(
+        model.w_stack, model.t, model.points))[:, 0]
+    np.testing.assert_array_equal(opened, wq)
+    # a straggler subset (the LAST T+1 shares) opens the same secret
+    sub = tuple(range(model.n - model.t - 1, model.n))
+    opened2 = np.asarray(shamir.reconstruct(
+        model.w_stack, model.t, model.points, subset=sub))[:, 0]
+    np.testing.assert_array_equal(opened2, wq)
+
+
+def test_encode_fallback_without_share_state(smoke_result):
+    """Results without protocol-native shares (state=None) still serve
+    from fresh shares of the quantized weights -- same exact scores."""
+    import dataclasses
+    res = dataclasses.replace(smoke_result, state=None)
+    wl = api.get_workload("smoke")
+    x, _ = _eval_queries("smoke", 8)
+    srv = api.serve("smoke", res, "eager", batch_size=8)
+    assert not srv.model.from_shares
+    ref = np.asarray(coded.reference_scores(res.weights, x, wl.cfg))
+    np.testing.assert_array_equal(srv.score_field(x), ref)
+
+
+# ------------------------------------------------------------- the front door
+
+def test_serve_rejects_proc_engine(smoke_result):
+    with pytest.raises(ValueError, match="future work"):
+        api.serve("smoke", smoke_result, "proc:4")
+
+
+def test_serve_rejects_mismatched_result(smoke_result, mnist_result):
+    with pytest.raises(ValueError, match="shape"):
+        api.serve("mnist10_like", smoke_result)
+    import dataclasses
+    relabeled = dataclasses.replace(mnist_result, workload="smoke")
+    with pytest.raises(ValueError, match="trained on"):
+        api.serve("mnist10_like", relabeled)
+
+
+def test_serve_queue_path_matches_direct_predict(smoke_result):
+    """Micro-batched serving (ragged tail included) returns the same
+    decisions, in submission order, as one direct predict() call."""
+    x, _ = _eval_queries("smoke", 21)          # 21 = 2 full windows + tail 5
+    srv = api.serve("smoke", smoke_result, "jit", batch_size=8)
+    preds, stats = srv.serve(x)
+    np.testing.assert_array_equal(preds, srv.predict(x))
+    assert stats["queries"] == 21
+    assert stats["batches"] == 3
+    assert stats["padded"] == 3                # 24 slots - 21 queries
+    assert stats["queries_per_s"] > 0 and stats["encode_s"] > 0
+
+
+def test_serve_main_cli(capsys, smoke_result):
+    from repro.api import cli
+    cli.serve_main(["smoke", "--engine", "eager", "--iters", "3",
+                    "--queries", "12", "--batch-size", "8"])
+    out = capsys.readouterr().out
+    assert "agreement with opened-model scoring" in out
+    assert "q/s" in out
+
+
+# ------------------------------------------------------- queue property tests
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_queue_window_expiry_flushes_partial():
+    clk = FakeClock()
+    q = MicroBatchQueue(batch_size=4, window_ms=10.0, clock=clk)
+    assert not q.ready()                       # empty: never ready
+    q.submit(np.zeros(3))
+    q.submit(np.ones(3))
+    assert not q.ready()                       # 2 < 4 and window open
+    clk.t += 0.0099
+    assert not q.ready()
+    clk.t += 0.0002                            # window expired
+    assert q.ready()
+    tickets, batch, n_valid = q.drain()
+    assert tickets == (0, 1) and n_valid == 2
+    assert batch.shape == (4, 3)
+    np.testing.assert_array_equal(batch[1], np.ones(3))
+    np.testing.assert_array_equal(batch[2:], np.zeros((2, 3)))
+    assert len(q) == 0 and not q.ready()
+
+
+def test_queue_full_batch_flushes_regardless_of_clock():
+    q = MicroBatchQueue(batch_size=2, window_ms=1e9, clock=FakeClock())
+    q.submit(np.zeros(2))
+    assert not q.ready()
+    q.submit(np.zeros(2))
+    assert q.ready()
+
+
+def test_queue_validates_inputs():
+    with pytest.raises(ValueError, match="batch_size"):
+        MicroBatchQueue(0, 5.0)
+    with pytest.raises(ValueError, match="window_ms"):
+        MicroBatchQueue(4, -1.0)
+    q = MicroBatchQueue(4, 5.0, clock=FakeClock())
+    with pytest.raises(ValueError, match="query row"):
+        q.submit(np.zeros((2, 3)))
+    q.submit(np.zeros(3))
+    with pytest.raises(ValueError, match="dim"):
+        q.submit(np.zeros(5))
+    with pytest.raises(ValueError, match="empty"):
+        MicroBatchQueue(4, 5.0, clock=FakeClock()).drain()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 9))
+def test_queue_preserves_order_and_pads(n_queries, batch_size):
+    """Draining everything yields every ticket exactly once, in
+    submission order, with every window exactly (batch_size, d)."""
+    q = MicroBatchQueue(batch_size, window_ms=1e9, clock=FakeClock())
+    rows = [np.full(2, i, np.float32) for i in range(n_queries)]
+    tickets = [q.submit(r) for r in rows]
+    assert tickets == list(range(n_queries))
+    seen = []
+    while len(q):
+        tk, batch, n_valid = q.drain()
+        assert batch.shape == (batch_size, 2)
+        assert 1 <= n_valid <= batch_size
+        for i, t in enumerate(tk):
+            np.testing.assert_array_equal(batch[i], rows[t])
+        np.testing.assert_array_equal(batch[n_valid:],
+                                      np.zeros((batch_size - n_valid, 2)))
+        seen.extend(tk)
+    assert seen == list(range(n_queries))

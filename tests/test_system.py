@@ -13,7 +13,7 @@ import pytest
 from repro.configs import registry
 from repro.data import pipeline
 from repro.models import model_zoo as MZ
-from repro.serve import serving
+from repro.models import lm_serving as serving
 from repro.train import checkpoint as ckpt_lib, elastic, trainer
 
 

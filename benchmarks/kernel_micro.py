@@ -65,8 +65,74 @@ def run(report):
            f"{z.size / dt / 1e6:.1f}_Melem_s")
 
     run_multiclient(report)
+    run_fused_step(report)
 
     return macs / _time(jitted, a, b)      # field MAC/s for the cost model
+
+
+def run_fused_step(report):
+    """Fused one-dispatch Phase-3/4 step vs the phase-siloed pipeline at the
+    mnist10_like training shape (N=13 clients, m=390, d=24, C=10, deg-1
+    gradient polynomial).
+
+    The siloed baseline is how the hot loop ran before the megakernel: each
+    phase's field contraction on its own accelerator dispatch (coded
+    gradient kernel, decode-fold matmul, masked-open matmul) with jnp glue
+    between them, so every intermediate round-trips through HBM.  The fused
+    path is ops.fused_step -- the same arithmetic as ONE pallas_call.  Both
+    run the interpret-mode Pallas path on CPU hosts; the checked equality
+    is bit-exactness of the final share update.
+    """
+    rng = np.random.default_rng(2)
+    n, m, d, c, k1 = 13, 390, 24, 10, 8
+    q_eta, inv2k1 = 12345, F.host_inv(1 << k1)
+    fld = lambda *s: jnp.asarray(                      # noqa: E731
+        rng.integers(0, F.P, size=s).astype(np.int32))
+    x, w, coeffs = fld(n, m, d), fld(n, d, c), fld(2)
+    dfull, rvec = fld(n), fld(n)
+    base, xty, wsh, radd, r0sh = (fld(n, d, c) for _ in range(5))
+    adv = jnp.zeros((n,), jnp.int32)
+
+    def fused():
+        _, new_w = ops.fused_step(x, w, coeffs, adv, dfull, rvec, base, xty,
+                                  wsh, radd, r0sh, q_eta=q_eta,
+                                  inv2k1=inv2k1, k1=k1, force_pallas=True)
+        return new_w
+
+    adj = jax.jit(lambda f: F.add(f, adv[:, None, None]))
+    mid = jax.jit(lambda common: F.add(
+        F.mul_scalar(F.sub(F.add(base, common.reshape(d, c)[None]), xty),
+                     q_eta), radd))
+    fin = jax.jit(lambda c_open, c_sh: F.sub(wsh, F.mul_scalar(
+        F.sub(F.sub(c_sh, radd),
+              F.sub(jnp.broadcast_to(
+                  jnp.bitwise_and(c_open.reshape(d, c), (1 << k1) - 1)[None],
+                  c_sh.shape), r0sh)), inv2k1)))
+
+    def siloed():
+        f = ops.coded_gradient_matrix(x, w, coeffs, force_pallas=True)
+        f_adj = adj(f)                                       # dispatch 2
+        common = ops.modmatmul(dfull[None], f_adj.reshape(n, -1),
+                               force_pallas=True)            # decode fold
+        c_sh = mid(common)                                   # scale + mask
+        c_open = ops.modmatmul(rvec[None], c_sh.reshape(n, -1),
+                               force_pallas=True)            # masked open
+        return fin(c_open, c_sh)                             # truncate
+
+    np.testing.assert_array_equal(np.asarray(fused()), np.asarray(siloed()))
+    # interleave the two schedules so background load hits both alike
+    tf, ts = float("inf"), float("inf")
+    for _ in range(9):
+        t0 = time.perf_counter()
+        fused().block_until_ready()
+        tf = min(tf, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        siloed().block_until_ready()
+        ts = min(ts, time.perf_counter() - t0)
+    report("kernel_micro/fused_step_one_dispatch", tf * 1e6,
+           f"n{n}_m{m}_d{d}_c{c}", workload="mnist10_like")
+    report("kernel_micro/fused_step_phase_siloed", ts * 1e6,
+           f"speedup_{ts / tf:.2f}x_fused", workload="mnist10_like")
 
 
 def run_multiclient(report):

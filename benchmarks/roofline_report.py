@@ -1,4 +1,17 @@
-"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+"""Roofline stage: dryrun roofline fractions + fused-step HBM traffic.
+
+Two row families feed BENCH_roofline.json:
+
+* aggregated results/dryrun/*.json cells (roofline_fraction per arch/shape,
+  as before -- empty until dryruns have been collected on this host), and
+* the analytic HBM-traffic model of one Phase-3/4 training step, fused
+  (kernels/fused_step.py, ONE dispatch) vs phase-siloed (each phase's
+  contraction on its own dispatch).  Byte counts follow from operand
+  shapes alone, so the reduction claim holds regardless of backend --
+  interpret-mode CPU today, Mosaic TPU later.  These rows are
+  derived-only (us_per_call = 0) so bench_diff gates their PRESENCE, not
+  wall-time noise.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +20,31 @@ import json
 import os
 
 COLUMNS = ("arch", "shape", "mesh", "dominant")
+
+# mnist10_like training shape: 13 clients, m=390 coded rows, d=24, C=10
+FUSED_SHAPE = (13, 390, 24, 10)
+
+
+def step_traffic_bytes(n: int, m: int, d: int, c: int) -> tuple:
+    """(fused_bytes, siloed_bytes) of int32 HBM traffic for one step.
+
+    Shared by both schedules: the kernel operands (coded X, coded w,
+    gradient coeffs, three (N,) decode/open vectors, five (N, d, C)
+    share planes) plus the two outputs (f and the updated shares).  The
+    siloed pipeline additionally round-trips every inter-dispatch
+    intermediate: f re-read by the offset add, f_adj written+read by the
+    decode fold, `common` written+read, c_sh written once and read by
+    both the masked open and the truncate finish, c_open written+read.
+    The fused kernel keeps all of those in on-chip scratch.
+    """
+    w4, ndc, dc = 4, n * d * c, d * c
+    shared = w4 * (n * m * d + ndc + 2 + 3 * n + 5 * ndc + 2 * ndc)
+    intermediates = w4 * (ndc            # f: extra read by the offset add
+                          + 2 * ndc      # f_adj round-trip
+                          + 2 * dc       # common round-trip
+                          + 3 * ndc      # c_sh: write + open read + fin read
+                          + 2 * dc)      # c_open round-trip
+    return shared, shared + intermediates
 
 
 def load(results_dir: str = "results/dryrun"):
@@ -41,6 +79,14 @@ def markdown_table(recs, mesh: str = "pod") -> str:
 
 
 def run(report, results_dir: str = "results/dryrun"):
+    n, m, d, c = FUSED_SHAPE
+    fused_b, siloed_b = step_traffic_bytes(n, m, d, c)
+    saved = 1.0 - fused_b / siloed_b
+    report("roofline/fused_step_bytes_one_dispatch", 0.0,
+           f"{fused_b}B_n{n}_m{m}_d{d}_c{c}", workload="mnist10_like")
+    report("roofline/siloed_step_bytes_six_dispatch", 0.0,
+           f"{siloed_b}B_fused_saves_{saved:.1%}", workload="mnist10_like")
+
     recs = load(results_dir)
     ok = [r for r in recs if r.get("status") == "ok"]
     if not ok:

@@ -53,8 +53,9 @@ def build_stages() -> dict:
         ctx["field_macs_per_s"] = kernel_micro.run(report)
 
     stages = [
-        Stage("kernel", kernel, ("synthetic", "-", "jit"),
-              "field/kernel microbenchmarks; calibrates field MAC/s"),
+        Stage("kernel_micro", kernel, ("synthetic", "-", "jit"),
+              "field/kernel microbenchmarks (incl. fused step vs "
+              "phase-siloed); calibrates field MAC/s"),
         Stage("engine", lambda report, ctx: kernel_micro.run_engine(report),
               ("engine_micro", "copml", "-"),
               "api.fit engine comparison: eager vs jit scan"),

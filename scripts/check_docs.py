@@ -230,6 +230,35 @@ def check_wire_kinds() -> list:
     return problems
 
 
+def check_fused() -> list:
+    """The fused hot loop must stay documented: its entry point
+    (ops.fused_step, the one-dispatch Phase-3/4 megakernel) and every
+    schedule/tuning knob it introduced.  These are the levers operators
+    actually flip, and an undocumented knob is how the bit-exactness
+    story rots."""
+    arch_p = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+    run_p = os.path.join(ROOT, "docs", "RUNNING.md")
+    if not os.path.exists(run_p):
+        return ["missing docs/RUNNING.md (the operator guide)"]
+    with open(arch_p) as f:
+        arch = f.read()
+    with open(run_p) as f:
+        running = f.read()
+    problems = []
+    if "ops.fused_step" not in arch + running:
+        problems.append("docs: fused hot-loop entry point `ops.fused_step` "
+                        "(kernels/fused_step.py) is undocumented")
+    for knob in ("REPRO_FUSED_STEP", "REPRO_PALLAS_BLOCKS",
+                 "REPRO_SHARDED_OVERLAP"):
+        if knob not in running:
+            problems.append(f"docs/RUNNING.md: env knob `{knob}` is live "
+                            "but undocumented")
+    if "repro.kernels.tune" not in running:
+        problems.append("docs/RUNNING.md: the block autotuner CLI "
+                        "(`python -m repro.kernels.tune`) is undocumented")
+    return problems
+
+
 def main() -> int:
     doc_text = ""
     for rel in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
@@ -241,7 +270,7 @@ def main() -> int:
             doc_text += f.read()
     problems = (check_packages(doc_text) + check_links() + check_commands()
                 + check_api() + check_serve() + check_analysis()
-                + check_wire_kinds())
+                + check_wire_kinds() + check_fused())
     for p in problems:
         print(p)
     if not problems:

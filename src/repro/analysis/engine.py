@@ -40,6 +40,7 @@ from .registry import (
     NARROW_DTYPES,
     P_VALUE,
     RAND,
+    REDUCE_SITES,
     REDUCED,
     SAFE_ROOTS,
     SECRET,
@@ -770,11 +771,17 @@ class FunctionAnalyzer:
         return ""
 
     def _call(self, node):
+        f = node.func
+        dotted = self.resolve_dotted(f)
+        if dotted in REDUCE_SITES:
+            # barrett_reduce/fold26 ARE the reduction: sanction raw
+            # arithmetic in the argument subtree, same as `% field.P`
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(a):
+                    if isinstance(sub, ast.BinOp):
+                        self._sanctioned.add(id(sub))
         arg_taints = [self.eval(a) for a in node.args]
         arg_taints += [self.eval(k.value) for k in node.keywords]
-        f = node.func
-
-        dotted = self.resolve_dotted(f)
         if dotted is not None:
             return self._apply_dotted(dotted, arg_taints, node)
 

@@ -97,6 +97,10 @@ RULES = {
 EFFECTS = {
     # --- field arithmetic: the wrappers ARE the sanctioned ops ------------
     "repro.core.field.*": {"kind": "fieldop"},
+    # explicit reduction sites (also in REDUCE_SITES below): their result
+    # is canonical in [0, p), so a following narrowing cast passes FLD002
+    "repro.core.field.barrett_reduce": {"kind": "fieldop"},
+    "repro.core.field.fold26": {"kind": "fieldop"},
     "repro.core.field.random_field": {
         "kind": "source", "labels": frozenset({RAND, FIELD, REDUCED})},
     "repro.core.field.host_inv": {"kind": "public"},
@@ -250,6 +254,18 @@ FLOAT_DTYPES = frozenset({"float16", "float32", "float64", "float_",
 
 FLD_EXEMPT_SUFFIXES = ("core/field.py", "core/quantize.py")
 FLD_EXEMPT_DIRS = ("kernels/",)
+
+
+#: calls that ARE a full mod-p reduction.  Like the `% field.P` idiom,
+#: passing an expression to one of these sanctions the raw `+`/`-`/`*`
+#: arithmetic in its argument subtree (FLD001): the mu-multiply/shift and
+#: q*p subtract inside barrett_reduce, or a lazy limb accumulation handed
+#: to fold26, are the reduction itself, not an unreduced leak.  The
+#: int32 magnitude bound is on the author, exactly as with `% field.P`.
+REDUCE_SITES = frozenset({
+    "repro.core.field.barrett_reduce",
+    "repro.core.field.fold26",
+})
 
 
 def fld_exempt(relpath: str) -> bool:

@@ -51,6 +51,28 @@ def fold26(t):
     return _csub(t1 * 5 + t0)
 
 
+# Barrett reduction against p = 2^26 - 5.  mu = floor(2^32 / p) = 64 = 2^6
+# EXACTLY (2^32 = 64*p + 320), so the Barrett quotient
+#   q = (t * mu) >> 32  =  (t << 6) >> 32  =  t >> 26
+# needs no 64-bit multiply: mu folds into a single shift.  The classic
+# Barrett error bound gives q in {floor(t/p)-1, floor(t/p)} for t < 2^31
+# (the gap t/p - t/2^26 = 5t/(p*2^26) < 1 over the whole range), hence
+# r = t - q*p lies in [0, 2p) and one conditional subtract finishes.
+BARRETT_MU = (1 << 32) // P          # 64 == 2^6, public constant
+_BARRETT_SHIFT = 32 - (BARRETT_MU.bit_length() - 1)   # 26
+
+
+def barrett_reduce(t):
+    """Barrett-reduce t in [0, 2^31) to [0, p).
+
+    q = (t * BARRETT_MU) >> 32 computed as a shift (mu is a power of two
+    for this p); r = t - q*p < 2p, one csub.  Sanctioned field-arithmetic
+    site: the mu-multiply/shift + q*p subtract is the reduction itself.
+    """
+    q = jax.lax.shift_right_logical(t, _BARRETT_SHIFT)
+    return _csub(t - q * P)
+
+
 def add(a, b):
     """(a + b) mod p.  a, b in [0, p): sum < 2^27, fits int32."""
     return _csub(a + b)
@@ -169,22 +191,61 @@ def _limbs(x):
     return jnp.stack(ls).astype(jnp.float32)
 
 
+def _lazy_shift26(h, b: int):
+    """h * 2^b (mod p) as an UNREDUCED int32 value, b in [0, 26).
+
+    Split h = h1 * 2^(26-b) + h0 (h0 < 2^(26-b)); then
+      h * 2^b = h1 * 2^26 + h0 * 2^b == 5*h1 + h0 * 2^b  (mod p).
+    The result is exact mod p but deliberately NOT reduced -- callers
+    accumulate several lazy terms and Barrett-reduce once.  Bound:
+    for h < 2^(26+c), result < 5*2^(b+c) + 2^26.
+    """
+    h1 = jax.lax.shift_right_logical(h, P_BITS - b)
+    h0 = jnp.bitwise_and(h, (1 << (P_BITS - b)) - 1)
+    return h1 * 5 + jax.lax.shift_left(h0, b)
+
+
+def recombine_limb_groups(groups):
+    """Mod-p combination  sum_s groups[s] * 2^(7s)  with ONE final reduce.
+
+    groups: 7 int32 arrays G_s < 2^26 (group s collects the limb-pair
+    partial sums with i+j == s: <= 4 terms, each <= 1024*127*127 < 2^24,
+    so G_s <= 66,064,384 < 2^26).  Every weight 2^(7s) mod p is applied
+    lazily -- static shift/splits via 2^26 == 5 (s <= 3), a plain *20
+    (s == 4, since 2^28 == 20 mod p), or *5 then shift-split (s in {5,6})
+    -- so no per-term reduction happens at all.  Worst-case total:
+      G_0 + (2^26 + 5*2^7) + (2^26 + 5*2^14) + (2^26 + 5*2^21)
+        + 20*G_4 + (2^26 + 5*2^11) + (2^26 + 5*2^17)
+      <= 1.36e9 < 2^31,
+    (the dominant term is 20*G_4 <= 990,965,760), so a single
+    barrett_reduce finishes.  This replaces the historical 16x
+    fold26+mul+add per-term chain.
+    """
+    t = groups[0]                                   # w = 1
+    t = t + _lazy_shift26(groups[1], 7)             # w = 2^7
+    t = t + _lazy_shift26(groups[2], 14)            # w = 2^14
+    t = t + _lazy_shift26(groups[3], 21)            # w = 2^21
+    t = t + groups[4] * 20                          # 2^28 == 20 (mod p)
+    t = t + _lazy_shift26(groups[5] * 5, 9)         # 2^35 == 5 * 2^9
+    t = t + _lazy_shift26(groups[6] * 5, 16)        # 2^42 == 5 * 2^16
+    return barrett_reduce(t)
+
+
 def _recombine_limb_products(s):
     """s: (4, 4, M, N) f32 exact-int partial sums (< 2^24).
 
     Returns (M, N) int32 mod-p recombination  sum_ij s[i,j] * 2^(7(i+j)).
-    All arithmetic int32: s_ij < 2^24 so mul() (13-bit limbs) applies.
-    Accumulate <= 7 reduced terms (< p each) between csubs: 7p < 2^29 ok --
-    we simply csub after every add via add().
+    Partial sums sharing a weight class s = i+j are grouped in int32
+    FIRST (f32 sums could cross the 2^24 exact-integer bound), then the
+    whole recombination is one Barrett reduce via recombine_limb_groups.
     """
-    acc = None
+    groups = [None] * (2 * _N_LIMBS - 1)
     for i in range(_N_LIMBS):
         for j in range(_N_LIMBS):
             term = s[i, j].astype(jnp.int32)
-            w = _LIMB_WEIGHTS[i + j]
-            term = mul(fold26(term), jnp.asarray(w, jnp.int32))
-            acc = term if acc is None else add(acc, term)
-    return acc
+            g = groups[i + j]
+            groups[i + j] = term if g is None else g + term
+    return recombine_limb_groups(groups)
 
 
 def matmul(a, b):

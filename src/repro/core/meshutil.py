@@ -148,3 +148,63 @@ def all_to_all_clients(x, axis_name: str = CLIENT_AXIS):
     (n_pad, n_loc, ...) per shard -> (n_loc, n_pad, ...) per shard."""
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=1,
                               tiled=True)
+
+
+# --------------------------------------------------------------------------
+# Ring (ppermute-chained) forms of the two EXCHANGE collectives.
+#
+# Monolithic psum_scatter / all_to_all force the WHOLE local contraction to
+# finish before any byte moves.  The ring forms take a `segment_fn(j)` /
+# `block_fn(j)` producing only shard j's slice of the local result, so each
+# hop's operand is computed just before its ppermute -- the GEMM for
+# segment j+1 has no data dependence on hop j and XLA is free to overlap
+# compute with the in-flight transfer.  Both are bit-exact with their
+# monolithic twins: segment values are the same canonical field elements
+# (a row slice of a matmul is the same contraction), the ring's raw int32
+# accumulation is the same no-overflow integer sum in a different order,
+# and the single trailing fold26 matches _reduce_mod's narrow path.
+
+
+def ring_reduce_scatter_mod(segment_fn, axis_name: str, ndev: int):
+    """Mod-p reduce-scatter as a D-1 hop ring; shard r ends with
+    fold26(sum_s segment_fn_of_shard_s(r)).
+
+    segment_fn(j) -> this shard's canonical-field partial destined for
+    shard j (j traced).  Requires ndev <= NARROW_SHARDS (raw int32 sum of D
+    canonical elements must not wrap); callers fall back to
+    psum_scatter_mod beyond that.
+    """
+    from . import field
+    assert ndev <= NARROW_SHARDS, ndev
+    r = jax.lax.axis_index(axis_name)
+    if ndev == 1:
+        return field.fold26(segment_fn(r))
+    perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+    # shard r's chunk travels the whole ring: start with the partial for
+    # destination r-1 (which r sends first), finish holding destination r
+    acc = segment_fn((r + ndev - 1) % ndev)
+    for k in range(ndev - 1):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        acc = acc + segment_fn((r + ndev - k - 2) % ndev)
+    return field.fold26(acc)
+
+
+def ring_all_to_all(block_fn, axis_name: str, ndev: int):
+    """Owner<->holder transpose as D-1 ppermute hops; bit-exact with
+    all_to_all_clients applied to the stacked blocks.
+
+    block_fn(j) -> this shard's (n_loc, ...) block destined for shard j
+    (j traced), i.e. rows j*n_loc..(j+1)*n_loc of the monolithic operand.
+    Each block is computed just before its hop.  Returns the received
+    blocks stacked on a NEW leading axis in SOURCE-shard order (shard s's
+    block at index s) -- shape (ndev, n_loc, ...).
+    """
+    r = jax.lax.axis_index(axis_name)
+    received = [block_fn(r)]                      # own block, k = 0
+    for k in range(1, ndev):
+        perm = [(i, (i + k) % ndev) for i in range(ndev)]
+        received.append(jax.lax.ppermute(block_fn((r + k) % ndev),
+                                         axis_name, perm))
+    stacked = jnp.stack(received)                 # index k <- shard (r-k)%D
+    # reorder k-major to source-shard-major: source s sits at k = (r-s)%D
+    return jnp.take(stacked, (r - jnp.arange(ndev)) % ndev, axis=0)

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import warnings
 from functools import partial
 from typing import Sequence
@@ -177,6 +178,13 @@ class Copml:
         # field coefficients of ghat at output scale lg given input scale lz
         self.poly_coeffs = self.obj.field_coeffs(cfg)
         self._mul = mpc.mul_bh08 if cfg.mpc_mul == "bh08" else mpc.mul_bgw
+        # fused-megakernel gate, snapshotted per instance (api.fit builds a
+        # fresh Copml, so tests flipping the env var always take effect):
+        #   "0"      -- phase-siloed reference path
+        #   "1"      -- fused one-dispatch step (ops.fused_step; Pallas if
+        #               REPRO_USE_PALLAS, else the fused jnp composition)
+        #   "kernel" -- force the Pallas megakernel regardless of USE_PALLAS
+        self.fused_mode = os.environ.get("REPRO_FUSED_STEP", "1")
 
     # ------------------------------------------------------------------ setup
 
@@ -365,11 +373,89 @@ class Copml:
             sub_alphas, self.betas[: self.cfg.k]).astype(np.int64)  # (K, R)
         return (dmat.sum(axis=0) % field.P).astype(np.int32)
 
+    def _fused_iteration(self, key, state: CopmlState, coded_w: Coded,
+                         subset=None, *, subset_idx=None, dvec=None,
+                         adv=None) -> CopmlState:
+        """Phases 3+4 as ONE dispatch (kernels/ops.fused_step).
+
+        Bit-exact with local_gradient + decode_and_update because every
+        operand handed to the kernel consumes the SAME randomness stream:
+
+        * `mix` is shamir.share(kf, ZEROS) -- identical masking coefficients
+          to decode_and_update's share_batch(kf, f) (the coefficient draw
+          depends only on key and shape), so share(h, o) = mix(h, o) + f(o)
+          and the holder-h decode splits into the value-independent
+          base[h] = dfull @ mix[h] (computed here) plus the holder-
+          independent dfull @ f_adj (computed in the kernel epilogue).
+        * TruncPr's r/[r]/[r0] come from truncation.trunc_pr_randomness
+          with the same kt split arity and draw shapes as trunc_pr_core.
+
+        The decode subset enters as the zero-scattered (N,) row `dfull`
+        (excluded clients get weight 0), which works for both the static
+        tuple form and the fault engines' traced (subset_idx, dvec) form.
+        """
+        from ..kernels import ops as kernel_ops
+        cfg, n = self.cfg, self.cfg.n_clients
+        kf, kt = jax.random.split(key)
+        rthr = cfg.recovery_threshold
+        if subset_idx is None:
+            if subset is None:
+                subset = tuple(range(rthr))
+            subset = tuple(subset)[:rthr]
+            dfull_np = np.zeros(n, np.int32)
+            dfull_np[list(subset)] = self._decode_vec(subset)
+            dfull = jnp.asarray(dfull_np)
+        else:
+            assert dvec is not None, "subset_idx needs its decode row dvec"
+            dfull = jnp.zeros((n,), jnp.int32).at[subset_idx].set(dvec)
+
+        c = self.obj.n_outputs
+        mix = shamir.share(
+            kf, jnp.zeros((n,) + self.w_shape, field.FIELD_DTYPE),
+            cfg.t, n, self.lambdas)                    # (N_h, N_o) + w_shape
+        base = jax.vmap(lambda mh: field.matmul(
+            dfull[None], mh.reshape(n, self.dw))[0])(mix)       # (N_h, dw)
+
+        r_sh, r0_sh = truncation.trunc_pr_randomness(
+            kt, self.w_shape, self.k1, self.k2,
+            lambda k, s: shamir.share(k, s, cfg.t, n, self.lambdas))
+        bias = 1 << (self.k2 - 1)
+        radd = field.add(r_sh, jnp.full_like(r_sh, bias))
+
+        # reconstruct's default open subset: first T+1 holders, zero-padded
+        rvec_np = np.zeros(n, np.int32)
+        rvec_np[: cfg.t + 1] = shamir.recon_weights(
+            self.lambdas, tuple(range(cfg.t + 1))).astype(np.int32)
+        rvec = jnp.asarray(rvec_np)
+
+        adv_off = jnp.zeros((n,), jnp.int32) if adv is None else \
+            jnp.where(adv, jnp.asarray(ADV_OFFSET, jnp.int32), 0)
+
+        mat = (n, self.d, c)
+        _, new_w = kernel_ops.fused_step(
+            state.coded_x,
+            coded_w.reshape(mat),
+            self.poly_coeffs, adv_off, dfull, rvec,
+            base.reshape(mat),
+            state.xty_shares.reshape(mat),
+            state.w_shares.reshape(mat),
+            radd.reshape(mat),
+            r0_sh.reshape(mat),
+            q_eta=self.q_eta, inv2k1=field.host_inv(1 << self.k1),
+            k1=self.k1, force_pallas=self.fused_mode == "kernel")
+        new_w = new_w.reshape((n,) + self.w_shape)
+        return dataclasses.replace(state, w_shares=new_w,
+                                   step=state.step + 1)
+
     def iteration(self, key, state: CopmlState,
                   subset: Sequence[int] | None = None, *,
                   subset_idx=None, dvec=None, adv=None) -> CopmlState:
         k1_, k2_ = jax.random.split(key)
         coded_w = self.encode_model(k1_, state.w_shares)
+        if self.fused_mode != "0":
+            return self._fused_iteration(k2_, state, coded_w, subset,
+                                         subset_idx=subset_idx, dvec=dvec,
+                                         adv=adv)
         f_values = self.local_gradient(state.coded_x, coded_w)
         if adv is not None:
             # adversarial clients contribute a CORRUPTED coded gradient --
@@ -647,7 +733,15 @@ class Copml:
         decode idx/row arrays scanned over, replicated), or "plan_adv"
         (additionally an (iters, n_pad) corruption mask)."""
         cache = self.__dict__.setdefault("_sharded_cache", {})
-        ckey = (mesh, iters, subset, history, fault_kind)
+        # compute/collective overlap: produce the EXCHANGE collectives'
+        # operands per destination shard and stream them around a ppermute
+        # ring (meshutil.ring_*) instead of blocking on the monolithic GEMM
+        # before the first byte moves.  Bit-exact either way (see the ring
+        # helpers); default on, REPRO_SHARDED_OVERLAP=0 restores the
+        # monolithic collectives.  Part of the cache key: the two settings
+        # compile different programs.
+        overlap = os.environ.get("REPRO_SHARDED_OVERLAP", "1") != "0"
+        ckey = (mesh, iters, subset, history, fault_kind, overlap)
         if ckey in cache:
             return cache[ckey]
 
@@ -701,6 +795,22 @@ class Copml:
             # EXCHANGE: reconstruct from ALL holders -- local weighted
             # partial, then a mod-p reduce-scatter hands each shard its own
             # clients' coded model rows
+            if overlap and ndev <= meshutil.NARROW_SHARDS:
+                if n_pad > n:
+                    enc = jnp.concatenate(
+                        [enc, jnp.zeros((enc.shape[0], n_pad - n, dw),
+                                        jnp.int32)], axis=1)
+
+                def seg(j):
+                    # dest shard j's rows of the weighted partial, computed
+                    # just before hop j so the GEMM rides the transfer
+                    sl = jax.lax.dynamic_slice_in_dim(
+                        enc, j * n_loc, n_loc, axis=1)
+                    return field.matmul(
+                        wall_loc[None, :],
+                        sl.reshape(sl.shape[0], -1)).reshape(n_loc, dw)
+
+                return meshutil.ring_reduce_scatter_mod(seg, axis, ndev)
             part = field.matmul(wall_loc[None, :],
                                 enc.reshape(enc.shape[0], -1)).reshape(n, dw)
             if n_pad > n:
@@ -741,11 +851,26 @@ class Copml:
                     axis=1)
             cl = jax.lax.dynamic_slice_in_dim(
                 coeffs, shard_ix * n_loc, n_loc, axis=1)        # (T,n_loc,dw)
-            mix = field.matmul(pmat_all, cl.reshape(t_, -1))
             f_flat = f_loc.reshape(n_loc, dw)
-            mine = field.add(mix.reshape(n_pad, n_loc, dw),
-                             f_flat[None])        # (N_holder, n_loc_own, dw)
-            per_holder = meshutil.all_to_all_clients(mine, axis)
+            if overlap:
+                def blk(j):
+                    # holder rows owned by shard j, built just before the
+                    # hop that carries them
+                    pj = jax.lax.dynamic_slice_in_dim(
+                        pmat_all, j * n_loc, n_loc, axis=0)
+                    mixj = field.matmul(pj, cl.reshape(t_, -1))
+                    return field.add(mixj.reshape(n_loc, n_loc, dw),
+                                     f_flat[None])
+
+                blocks = meshutil.ring_all_to_all(blk, axis, ndev)
+                # (src, n_loc_holder, n_loc_own, dw) -> owner-major concat
+                per_holder = jnp.moveaxis(blocks, 0, 1).reshape(
+                    n_loc, n_pad, dw)
+            else:
+                mix = field.matmul(pmat_all, cl.reshape(t_, -1))
+                mine = field.add(mix.reshape(n_pad, n_loc, dw),
+                                 f_flat[None])    # (N_holder, n_loc_own, dw)
+                per_holder = meshutil.all_to_all_clients(mine, axis)
             # (n_loc_holder, N_owner, dw): decode LOCALLY per holder
             evals = per_holder[:, sub_t, :]                     # (n_loc,R,dw)
             xtg = jax.vmap(

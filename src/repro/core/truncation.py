@@ -28,6 +28,25 @@ from . import field, shamir
 from .labels import SecretRand, Share
 
 
+def trunc_pr_randomness(key, shape, k1: int, k2: int, share):
+    """The offline, value-INDEPENDENT half of TruncPr: draw r, deal [r], [r0].
+
+    Extracted so the fused megakernel path (kernels/fused_step.py) can
+    pre-deal the correlated randomness and hand the kernel epilogue only
+    the share arrays -- consuming the key stream IDENTICALLY to
+    trunc_pr_core (same split arity, same draw shapes, same share calls),
+    which is what keeps the fused engines bit-exact with the reference.
+    """
+    kr, ks1, ks2 = jax.random.split(key, 3)
+    # offline correlated randomness (crypto-service provider / PRSS, fn. 3)
+    r: SecretRand = jax.random.randint(kr, shape, 0, 1 << k2,
+                                       dtype=jnp.int32)
+    r0 = jnp.bitwise_and(r, (1 << k1) - 1)
+    r_sh = share(ks1, r.astype(field.FIELD_DTYPE))
+    r0_sh = share(ks2, r0.astype(field.FIELD_DTYPE))
+    return r_sh, r0_sh
+
+
 def trunc_pr_core(key, a_shares: Share, k1: int, k2: int,
                   share, open_) -> Share:
     """TruncPr's arithmetic, parameterized over the share/open primitives.
@@ -44,13 +63,7 @@ def trunc_pr_core(key, a_shares: Share, k1: int, k2: int,
     """
     assert 0 < k1 < k2 < field.P_BITS
     shape = a_shares.shape[1:]
-    kr, ks1, ks2 = jax.random.split(key, 3)
-    # offline correlated randomness (crypto-service provider / PRSS, fn. 3)
-    r: SecretRand = jax.random.randint(kr, shape, 0, 1 << k2,
-                                       dtype=jnp.int32)
-    r0 = jnp.bitwise_and(r, (1 << k1) - 1)
-    r_sh = share(ks1, r.astype(field.FIELD_DTYPE))
-    r0_sh = share(ks2, r0.astype(field.FIELD_DTYPE))
+    r_sh, r0_sh = trunc_pr_randomness(key, shape, k1, k2, share)
 
     # online: open c = a + 2^{k2-1} + r  (bias makes the value positive)
     bias = 1 << (k2 - 1)

@@ -47,8 +47,11 @@ def _limb_dot_mod(a, b, contract_a: int, contract_b: int):
     """Field 'matmul' of int32 blocks a, b contracting the given dims.
 
     Contraction length must be <= 1024 (exact f32).  Returns int32 mod p.
+    The 16 limb-pair MXU partials are grouped by weight class s = i+j in
+    int32 and recombined with ONE Barrett reduce (field.recombine_limb_
+    groups) instead of the historical per-term fold26 + modular multiply.
     """
-    acc = None
+    groups = [None] * 7
     dn = (((contract_a,), (contract_b,)), ((), ()))
     for i in range(4):
         ai = _limb(a, i)
@@ -56,11 +59,10 @@ def _limb_dot_mod(a, b, contract_a: int, contract_b: int):
             bj = _limb(b, j)
             s = jax.lax.dot_general(ai, bj, dn,
                                     preferred_element_type=jnp.float32)
-            term = field.fold26(s.astype(jnp.int32))
-            w = pow(2, 7 * (i + j), field.P)
-            term = field.mul(term, jnp.asarray(w, jnp.int32))
-            acc = term if acc is None else field.add(acc, term)
-    return acc
+            term = s.astype(jnp.int32)
+            g = groups[i + j]
+            groups[i + j] = term if g is None else g + term
+    return field.recombine_limb_groups(groups)
 
 
 def _fused_block(x, w, c_ref, o_ref, pre: tuple, *, degree: int, dc: int):

@@ -39,18 +39,21 @@ def _limb_matmul_mod(a_blk, b_blk):
     """Field matmul of one (bm, bk) x (bk, bn) block; all int32/f32.
 
     16 MXU matmuls + int32 modular recombination.  Requires bk <= 1024.
+    Limb-pair partials sharing a weight class s = i+j are summed in int32
+    and the static 2^(7s) weights applied lazily, so the whole block costs
+    ONE Barrett reduce (field.recombine_limb_groups) instead of 16
+    fold26 + modular-multiply chains.
     """
-    acc = None
+    groups = [None] * 7
     for i in range(4):
         ai = _limb(a_blk, i)
         for j in range(4):
             bj = _limb(b_blk, j)
             s = jnp.dot(ai, bj, preferred_element_type=jnp.float32)
-            term = field.fold26(s.astype(jnp.int32))
-            w = pow(2, 7 * (i + j), field.P)
-            term = field.mul(term, jnp.asarray(w, jnp.int32))
-            acc = term if acc is None else field.add(acc, term)
-    return acc
+            term = s.astype(jnp.int32)
+            g = groups[i + j]
+            groups[i + j] = term if g is None else g + term
+    return field.recombine_limb_groups(groups)
 
 
 def _kernel(a_ref, b_ref, o_ref):

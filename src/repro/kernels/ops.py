@@ -7,12 +7,14 @@ shapes fall back to the pure-jnp reference (padding overhead would dominate).
 
 from __future__ import annotations
 
+import json
 import os
 
 import jax.numpy as jnp
 
 from . import coded_gradient as _cg
 from . import field_poly as _fp
+from . import fused_step as _fs
 from . import modmatmul as _mm
 from . import ref
 from ..core.labels import Coded, Public
@@ -20,6 +22,65 @@ from ..core.labels import Coded, Public
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 # interpret-mode kernels are slow on CPU; route big shapes only when asked
 USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") != "0"
+
+# ---------------------------------------------------------------------------
+# (bm, dc) block selection for the gradient-family kernels.
+#
+# Priority: REPRO_PALLAS_BLOCKS="bm,dc" env override > the offline tuner's
+# JSON table (kernels/blocks.json, written by `python -m repro.kernels.tune`)
+# keyed by the power-of-2 (m, d, C) bucket > a shape-derived fallback.  Any
+# choice is bit-exact (every partial is fully reduced mod p before
+# accumulation, so chunking cannot change the canonical int32 result);
+# selection only affects padding waste and VMEM residency.
+
+_BLOCKS_PATH = os.path.join(os.path.dirname(__file__), "blocks.json")
+_block_table_cache = None
+
+
+def _block_table():
+    global _block_table_cache
+    if _block_table_cache is None:
+        try:
+            with open(_BLOCKS_PATH) as fh:
+                _block_table_cache = json.load(fh)
+        except (OSError, ValueError):
+            _block_table_cache = {}
+    return _block_table_cache
+
+
+def _bucket(v: int) -> int:
+    """Power-of-2 ceiling, floored at 8 (the smallest legal block)."""
+    b = 8
+    while b < v:
+        b *= 2
+    return b
+
+
+def block_key(m: int, d: int, c: int = 1) -> str:
+    return f"m{_bucket(m)}_d{_bucket(d)}_c{_bucket(c)}"
+
+
+def pick_blocks(m: int, d: int, c: int = 1) -> tuple[int, int]:
+    """(bm, dc) for an (m, d, C) gradient-family shape.
+
+    The fallback derives minima from the ACTUAL shape including the class
+    width: the matrix path's VMEM block holds (bm, d) of X~ plus the
+    (dc, C) output slice, so dc is shrunk when C is wide instead of
+    reusing the vector-path minimum (which padded ragged class-batched
+    shapes pathologically -- see the (m=13, C=10) regression test).
+    """
+    env = os.environ.get("REPRO_PALLAS_BLOCKS", "")
+    if env:
+        bm_s, dc_s = env.split(",")
+        return int(bm_s), int(dc_s)
+    entry = _block_table().get(block_key(m, d, c))
+    if entry:
+        return int(entry["bm"]), int(entry["dc"])
+    bm = min(_cg.DEFAULT_BM, _bucket(m))
+    dc = min(_cg.DEFAULT_DC, _bucket(d))
+    while c > 1 and dc * _bucket(c) > 16384 and dc > 8:
+        dc //= 2
+    return bm, dc
 
 
 def _pad_to(x, axis, mult):
@@ -112,8 +173,9 @@ def coded_gradient_batched(x: Coded, w: Coded, coeffs: Public, *, bm=None,
     if not (USE_PALLAS or force_pallas):
         return ref.coded_gradient_batched(x, w, coeffs)
     d0 = x.shape[2]
-    bm = bm or min(_cg.DEFAULT_BM, max(8, x.shape[1]))
-    dc = dc or min(_cg.DEFAULT_DC, max(8, d0))
+    tbm, tdc = pick_blocks(x.shape[1], d0)
+    bm = bm or tbm
+    dc = dc or tdc
     x, _ = _pad_to(x, 1, bm)
     x, dpad = _pad_to(x, 2, dc)
     w, _ = _pad_to(w, 1, dc)
@@ -133,11 +195,35 @@ def coded_gradient_matrix(x: Coded, w: Coded, coeffs: Public, *, bm=None,
     if not (USE_PALLAS or force_pallas):
         return ref.coded_gradient_matrix(x, w, coeffs)
     d0 = x.shape[2]
-    bm = bm or min(_cg.DEFAULT_BM, max(8, x.shape[1]))
-    dc = dc or min(_cg.DEFAULT_DC, max(8, d0))
+    tbm, tdc = pick_blocks(x.shape[1], d0, w.shape[2])
+    bm = bm or tbm
+    dc = dc or tdc
     x, _ = _pad_to(x, 1, bm)
     x, dpad = _pad_to(x, 2, dc)
     w, _ = _pad_to(w, 1, dc)
     out = _cg.coded_gradient_matrix(x, w, coeffs, bm=bm, dc=dc,
                                     interpret=INTERPRET)
     return out[:, :d0] if dpad else out
+
+
+def fused_step(x, w, coeffs, adv_off, dfull, rvec, base, xty, wsh, radd,
+               r0sh, *, q_eta: int, inv2k1: int, k1: int, bm=None, dc=None,
+               force_pallas: bool = False):
+    """Full COPML Phase-3/4 step (post model-encode) as ONE dispatch.
+
+    See kernels/fused_step.py for the operand contract.  Pads only the
+    sample axis m (zero rows are exact: they contribute nothing to X~^T g);
+    the kernel takes d ragged.  Falls back to the phase-by-phase reference
+    composition when Pallas is not requested.
+    """
+    if not (USE_PALLAS or force_pallas):
+        return ref.fused_step(x, w, coeffs, adv_off, dfull, rvec, base, xty,
+                              wsh, radd, r0sh, q_eta=q_eta, inv2k1=inv2k1,
+                              k1=k1)
+    tbm, tdc = pick_blocks(x.shape[1], x.shape[2], w.shape[2])
+    bm = bm or tbm
+    dc = dc or min(tdc, _bucket(x.shape[2]))
+    x, _ = _pad_to(x, 1, bm)
+    return _fs.fused_step(x, w, coeffs, adv_off, dfull, rvec, base, xty,
+                          wsh, radd, r0sh, q_eta=q_eta, inv2k1=inv2k1,
+                          k1=k1, bm=bm, dc=dc, interpret=INTERPRET)

@@ -66,3 +66,29 @@ def coded_gradient_matrix(x: Coded, w: Coded, coeffs: Public) -> Coded:
     z = jax.vmap(field.matmul)(x, w)                        # (N, m, C)
     g = field.evaluate_poly_dyn(coeffs, z)
     return jax.vmap(field.matmul)(jnp.swapaxes(x, 1, 2), g)  # (N, d, C)
+
+
+def fused_step(x, w, coeffs, adv_off, dfull, rvec, base, xty, wsh, radd,
+               r0sh, *, q_eta: int, inv2k1: int, k1: int):
+    """Phase-by-phase oracle for kernels.fused_step (same operands/returns).
+
+    Composes the existing references in protocol order: matrix coded
+    gradient, corruption offset, decode fold against the zero-scattered
+    decode row, q_eta scale, TruncPr masked open (rvec = the reconstruct
+    Lagrange row zero-padded over holders) and borrow-folded rescale.
+    """
+    n = x.shape[0]
+    f = coded_gradient_matrix(x, w, coeffs)
+    f_adj = field.add(f, adv_off[:, None, None])
+    common = field.matmul(
+        dfull[None], f_adj.reshape(n, -1))[0].reshape(f.shape[1:])
+    xtg = field.add(base, common[None])
+    grad = field.sub(xtg, xty)
+    scaled = field.mul_scalar(grad, q_eta)
+    c_sh = field.add(scaled, radd)
+    c_open = field.matmul(
+        rvec[None], c_sh.reshape(n, -1))[0].reshape(c_sh.shape[1:])
+    c0 = jnp.bitwise_and(c_open, (1 << k1) - 1)
+    a0 = field.sub(jnp.broadcast_to(c0[None], c_sh.shape), r0sh)
+    delta = field.mul_scalar(field.sub(scaled, a0), inv2k1)
+    return f, field.sub(wsh, delta)

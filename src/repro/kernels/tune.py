@@ -1,0 +1,117 @@
+"""Offline (bm, dc) block autotuner for the gradient-family Pallas kernels.
+
+Sweeps candidate block shapes for a given (m, d, C) bucket by timing the
+class-batched coded-gradient kernel (the megakernel's inner loop -- block
+choice affects both identically) and caches the winner in a JSON table
+(`kernels/blocks.json` by default) consulted by `ops.pick_blocks` at
+dispatch time.  Selection is a pure performance knob: every candidate is
+bit-exact (partials are fully reduced mod p before accumulation), so the
+table never needs revalidation, only re-timing on new hardware.
+
+CLI:
+
+    PYTHONPATH=src python -m repro.kernels.tune \
+        --shape 390,24,10 --shape 512,512,1 --reps 3 \
+        --out src/repro/kernels/blocks.json
+
+Runtime override without touching the table: REPRO_PALLAS_BLOCKS="bm,dc".
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import field
+from . import coded_gradient as _cg
+from . import ops
+
+BM_CANDIDATES = (32, 64, 128, 256, 512)
+DC_CANDIDATES = (32, 64, 128, 256, 512)
+
+
+def _candidates(m: int, d: int, c: int):
+    """Blocks worth timing for this bucket: no block larger than the padded
+    shape's power-of-2 ceiling (bigger only adds padding waste)."""
+    mb, db = ops._bucket(m), ops._bucket(d)
+    bms = sorted({min(bm, mb) for bm in BM_CANDIDATES})
+    dcs = sorted({min(dc, db) for dc in DC_CANDIDATES})
+    return [(bm, dc) for bm in bms for dc in dcs]
+
+
+def _time_blocks(x, w, coeffs, bm: int, dc: int, reps: int) -> float:
+    def call():
+        out = ops.coded_gradient_matrix(x, w, coeffs, bm=bm, dc=dc,
+                                        force_pallas=True)
+        out.block_until_ready()
+        return out
+
+    call()                                     # compile/warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        call()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune_shape(m: int, d: int, c: int, *, n_clients: int = 4,
+               reps: int = 3, verbose: bool = False) -> dict:
+    """Time every candidate for one (m, d, C) bucket; return the winner."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, field.P, size=(n_clients, m, d),
+                                 dtype=np.int64).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, field.P, size=(n_clients, d, c),
+                                 dtype=np.int64).astype(np.int32))
+    coeffs = jnp.asarray(rng.integers(0, field.P, size=(3,),
+                                      dtype=np.int64).astype(np.int32))
+    best = None
+    for bm, dc in _candidates(m, d, c):
+        dt = _time_blocks(x, w, coeffs, bm, dc, reps)
+        if verbose:
+            print(f"  bm={bm:4d} dc={dc:4d}  {dt * 1e3:8.2f} ms")
+        if best is None or dt < best["us"]:
+            best = {"bm": bm, "dc": dc, "us": dt}
+    return {"bm": best["bm"], "dc": best["dc"],
+            "us": round(best["us"] * 1e6, 1)}
+
+
+def update_table(path: str, shapes, *, reps: int = 3,
+                 verbose: bool = False) -> dict:
+    """Tune each (m, d, c) shape and merge winners into the JSON table."""
+    try:
+        with open(path) as fh:
+            table = json.load(fh)
+    except (OSError, ValueError):
+        table = {}
+    for m, d, c in shapes:
+        key = ops.block_key(m, d, c)
+        if verbose:
+            print(f"{key}  (m={m}, d={d}, C={c})")
+        table[key] = tune_shape(m, d, c, reps=reps, verbose=verbose)
+    with open(path, "w") as fh:
+        json.dump(table, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--shape", action="append", default=[],
+                    metavar="M,D,C", help="shape bucket to tune (repeatable)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=ops._BLOCKS_PATH)
+    args = ap.parse_args(argv)
+    shapes = [tuple(int(v) for v in s.split(",")) for s in args.shape]
+    if not shapes:
+        shapes = [(390, 24, 10), (512, 512, 1)]   # mnist10_like + GEMM-ish
+    table = update_table(args.out, shapes, reps=args.reps, verbose=True)
+    print(f"wrote {len(table)} entries -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

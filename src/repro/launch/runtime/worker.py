@@ -161,7 +161,14 @@ def _run_session(node: net.Node, sess: dict):
         contraction runs as a socket reduce-scatter: each rank weights
         its own holders' encodings, sends peer s the partial for s's
         clients, and field.adds the partials it receives (chained exact
-        mod-p addition == psum_scatter_mod's sum-then-reduce)."""
+        mod-p addition == psum_scatter_mod's sum-then-reduce).
+
+        Each peer's partial is a row slice of the weighted contraction,
+        so it is computed JUST before its send: peer s's frame is on the
+        wire while the GEMM for peer s+1 runs, instead of every byte
+        waiting behind the monolithic (n_pad, dw) matmul.  Same frames,
+        same order, same payload bits (a row slice of a matmul is the
+        same contraction) -- commlint's budget holds unchanged."""
         with clock("encode"):
             kv, ks_ = jax.random.split(k1_)
             v = field.random_field(kv, (t_,) + w_shape)
@@ -172,18 +179,23 @@ def _run_session(node: net.Node, sess: dict):
             enc = jax.vmap(lambda b, vv: lagrange.lcc_encode(
                 b[:, None, :], vv[:, None, :], proto.alphas, proto.betas
             )[:, 0, :])(blocks, v_flat)                      # (n_loc, N, dw)
-            part = field.matmul(wall_loc[None, :],
-                                enc.reshape(n_loc, -1)).reshape(n, dw)
             if n_pad > n:
-                part = jnp.concatenate(
-                    [part, jnp.zeros((n_pad - n, dw), jnp.int32)], axis=0)
+                enc = jnp.concatenate(
+                    [enc, jnp.zeros((n_loc, n_pad - n, dw), jnp.int32)],
+                    axis=1)
+
+            def seg(s):
+                sl = enc[:, s * n_loc:(s + 1) * n_loc]
+                return field.matmul(
+                    wall_loc[None, :],
+                    sl.reshape(n_loc, -1)).reshape(n_loc, dw)
+
             for s in range(P):
                 if s == rank:
                     continue
-                seg = part[s * n_loc:(s + 1) * n_loc]
                 node.send(s, net.ENC, step=step,
-                          payload=wire.share_payload(seg), phase="encode")
-            acc = part[lo:lo + n_loc]
+                          payload=wire.share_payload(seg(s)), phase="encode")
+            acc = seg(rank)
             for s in range(P):
                 if s == rank:
                     continue
@@ -241,19 +253,24 @@ def _run_session(node: net.Node, sess: dict):
             coeffs = jnp.concatenate(
                 [coeffs, jnp.zeros((t_, n_pad - n, dw), jnp.int32)], axis=1)
         cl = coeffs[:, lo:lo + n_loc]
-        mix = field.matmul(pmat_all, cl.reshape(t_, -1))
         f_flat = f_loc.reshape(n_loc, dw)
-        mine = field.add(mix.reshape(n_pad, n_loc, dw),
-                         f_flat[None])    # (N_holder, n_loc_owner, dw)
+
+        def mine_block(s):
+            # holder rows owned by rank s, built just before the send so
+            # the SHARE frame for s rides the wire while s+1's block GEMM
+            # runs (same frames/order/bits as the monolithic form)
+            mixs = field.matmul(pmat_all[s * n_loc:(s + 1) * n_loc],
+                                cl.reshape(t_, -1))
+            return field.add(mixs.reshape(n_loc, n_loc, dw), f_flat[None])
+
         with clock("exchange"):
             for s in range(P):
                 if s == rank:
                     continue
-                block = mine[s * n_loc:(s + 1) * n_loc]
                 node.send(s, net.SHARE, step=step,
-                          payload=wire.share_payload(block),
+                          payload=wire.share_payload(mine_block(s)),
                           phase="exchange")
-            blocks = {rank: mine[lo:lo + n_loc]}
+            blocks = {rank: mine_block(rank)}
             sub = collect_blocks(blocks, step)
         if sub not in dvec_cache:
             dvec_cache[sub] = jnp.asarray(proto._decode_vec(sub))

@@ -1,0 +1,13 @@
+"""FLD001+FLD002: the same lazy accumulation WITHOUT a reduction site.
+
+The raw `+`/`*` chain never reaches barrett_reduce/fold26 or `% field.P`,
+so the arithmetic is unsanctioned and the narrowing cast is unreduced.
+"""
+from repro.core import field
+
+
+def lazy_unreduced(x, y):
+    z = field.mul(x, y)
+    hi = field.mul(x, x)
+    t = z + hi * 20
+    return t.astype("int32")

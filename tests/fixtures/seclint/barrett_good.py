@@ -1,0 +1,20 @@
+"""No-fire: barrett_reduce/fold26 are sanctioned reduction sites.
+
+Like the `% field.P` idiom, handing an expression to one of them
+sanctions the raw arithmetic in the argument subtree (the mu-shift and
+q*p subtract ARE the reduction), and their result is canonical in
+[0, p), so a following narrowing cast passes FLD002.
+"""
+from repro.core import field
+
+
+def lazy_recombine(x, y):
+    z = field.mul(x, y)
+    hi = field.mul(x, x)
+    t = field.barrett_reduce(z + hi * 20)      # lazy limb accumulation
+    return t.astype("int32")
+
+
+def folded_sum(x, y):
+    acc = field.fold26(field.mul(x, y) + field.mul(y, y))
+    return acc.astype("int32")

@@ -61,6 +61,8 @@ CORPUS = [
     ("fld003_good.py", []),
     ("fld004_bad.py", ["FLD004"]),
     ("fld004_good.py", []),
+    ("barrett_bad.py", ["FLD001", "FLD002"]),  # lazy accum, no reduce site
+    ("barrett_good.py", []),   # barrett_reduce/fold26 sanction the subtree
     ("wvr001_bad.py", ["SEC001", "WVR001"]),  # malformed pragma waives nothing
     ("wvr001_good.py", []),                   # both findings waived
     ("wvr002_strict.py", []),                 # unused waiver: clean by default

@@ -417,7 +417,8 @@ def test_benchmark_stage_registry():
         sys.path.insert(0, _REPO)
     brun = importlib.import_module("benchmarks.run")
     stages = brun.build_stages()
-    assert set(stages) >= {"kernel", "engine", "distributed", "resilience",
+    assert set(stages) >= {"kernel_micro", "engine", "distributed",
+                           "resilience",
                            "procnet", "multiclass", "fig3", "fig4",
                            "table1", "table2", "roofline"}
     for s in stages.values():

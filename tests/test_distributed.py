@@ -115,14 +115,22 @@ np.testing.assert_array_equal(res_mj.weights, res_m0.weights)
 assert res_mj.weights.shape == (6, 3)
 print("PARITY faultplan_ovr3_n13_dev4", flush=True)
 
-# dryrun_cell smoke: compile one real sharded iteration, check collectives
+# dryrun_cell smoke: compile one real sharded iteration, check collectives.
+# Default (overlap on): the ENC reduce-scatter and SHARE all-to-all lower to
+# ppermute rings, so the HLO carries collective-permutes plus the OPEN
+# all-gather; REPRO_SHARDED_OVERLAP=0 restores the monolithic collectives.
 from repro.launch import copml_dist
 rec = copml_dist.dryrun_cell("smoke", meshutil.client_mesh(4), False)
 assert rec["status"] == "ok", rec
 assert rec["n_clients"] == 4
 colls = rec["collectives"]
-assert colls["all-to-all"] >= 1 and colls["reduce-scatter"] >= 1 \
-    and colls["all-gather"] >= 1, colls
+assert colls["collective-permute"] >= 2 and colls["all-gather"] >= 1, colls
+os.environ["REPRO_SHARDED_OVERLAP"] = "0"
+colls0 = copml_dist.dryrun_cell(
+    "smoke", meshutil.client_mesh(4), False)["collectives"]
+del os.environ["REPRO_SHARDED_OVERLAP"]
+assert colls0["all-to-all"] >= 1 and colls0["reduce-scatter"] >= 1 \
+    and colls0["all-gather"] >= 1, colls0
 assert "skipped" in copml_dist.dryrun_cell(
     "long_500k", meshutil.client_mesh(4), False)["status"]
 print("DRYRUN OK", flush=True)

@@ -52,3 +52,16 @@ def test_docs_lint_catches_broken_anchor(tmp_path, capsys):
         "# Repo\n`repro/mystery`\n[anchor](docs/ARCHITECTURE.md#missing)\n")
     assert mod.main() == 1
     assert "broken anchor" in capsys.readouterr().out
+
+
+def test_docs_lint_catches_undocumented_fused_knobs(tmp_path):
+    """check_fused: a docs tree that drops the megakernel entry point or
+    its env knobs must fail the lint."""
+    mod = _fake_repo(tmp_path, "# Repo\n`repro/mystery`\n")
+    (tmp_path / "docs" / "RUNNING.md").write_text("# Running\nnothing\n")
+    problems = mod.check_fused()
+    assert any("ops.fused_step" in p for p in problems)
+    for knob in ("REPRO_FUSED_STEP", "REPRO_PALLAS_BLOCKS",
+                 "REPRO_SHARDED_OVERLAP"):
+        assert any(knob in p for p in problems), knob
+    assert any("repro.kernels.tune" in p for p in problems)
